@@ -1,0 +1,58 @@
+"""Pallas kernel micro-benchmarks.
+
+CPU caveat: pallas kernels execute via interpret=True on CPU (a Python
+interpreter of the kernel body) so absolute numbers are NOT TPU
+projections; the jnp reference path is timed as the comparable baseline
+and the derived column records the kernel/ref allclose delta (the perf
+claims live in the roofline analysis, not here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.kernels.edge_spmm import ops as es_ops, ref as es_ref
+from repro.kernels.eg_update import ops as eg_ops, ref as eg_ref
+from repro.kernels.laplacian_poly import ops as lp_ops, ref as lp_ref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    n, k = 512, 8
+    l_mat = jax.random.normal(key, (n, n)) / 32
+    u = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+
+    ref_fn = jax.jit(lambda: lp_ref.poly_step(l_mat, u, 0.01))
+    us = time_call(ref_fn, iters=5)
+    kout = lp_ops.poly_step(l_mat, u, 0.01, interpret=True)
+    err = float(jnp.max(jnp.abs(kout - ref_fn())))
+    rows.append(("kernels/poly_step_ref_n512", round(us, 1),
+                 f"kernel_maxerr={err:.2g}"))
+
+    e = 4096
+    src = jax.random.randint(jax.random.fold_in(key, 2), (e,), 0, n)
+    dst = jax.random.randint(jax.random.fold_in(key, 3), (e,), 0, n)
+    w = jax.random.uniform(jax.random.fold_in(key, 4), (e,))
+    ref_fn = jax.jit(lambda: es_ref.edge_spmm(src, dst, w, u))
+    us = time_call(ref_fn, iters=5)
+    kout = es_ops.edge_spmm(src, dst, w, u, interpret=True)
+    err = float(jnp.max(jnp.abs(kout - ref_fn())))
+    rows.append(("kernels/edge_spmm_ref_e4096", round(us, 1),
+                 f"kernel_maxerr={err:.2g}"))
+
+    v = u / jnp.linalg.norm(u, axis=0, keepdims=True)
+    av = jax.random.normal(jax.random.fold_in(key, 5), (n, k))
+    ref_fn = jax.jit(lambda: eg_ref.mu_eg_update(v, av, 0.05))
+    us = time_call(ref_fn, iters=5)
+    kout = eg_ops.mu_eg_update(v, av, 0.05, interpret=True)
+    err = float(jnp.max(jnp.abs(kout - ref_fn())))
+    rows.append(("kernels/eg_update_ref_n512", round(us, 1),
+                 f"kernel_maxerr={err:.2g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

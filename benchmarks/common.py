@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: timing + the paper's convergence protocol."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SolverConfig, identity_series, laplacian_dense,
+                        limit_neg_exp, run_solver, steps_to_streak,
+                        steps_to_tolerance, taylor_log, taylor_neg_exp,
+                        with_lambda_star)
+from repro.core import metrics, operators
+from repro.core.series import cheb_log
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (jits + blocks)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def paper_transform_suite(rho_ub: float, degree: int = 251):
+    """The transformations compared in the paper's figures:
+    identity | exact -e^{-L} (via scalar map) | limit series | taylor-log
+    plus our beyond-paper chebyshev-log."""
+    return {
+        "identity": with_lambda_star(identity_series(), rho_ub * 1.01),
+        "limit_neg_exp": limit_neg_exp(degree),
+        "limit_neg_exp_scaled": limit_neg_exp(
+            degree, scale=8.0 / rho_ub),
+        "cheb_log(beyond)": cheb_log(64, rho=rho_ub),
+    }
+
+
+def convergence_run(g, transform, method: str, lr: float, steps: int, k: int,
+                    v_star=None, eval_every: int = 25):
+    """Paper protocol: run solver, report steps-to-full-streak and
+    steps-to-1% subspace error."""
+    L = laplacian_dense(g)
+    if v_star is None:
+        _, v_star = metrics.ground_truth_bottom_k(L, k)
+    op = operators.series_operator(transform, operators.dense_matvec(L))
+    cfg = SolverConfig(method=method, lr=lr, steps=steps,
+                       eval_every=eval_every, k=k, seed=0)
+    t0 = time.perf_counter()
+    _, trace = run_solver(op, g.num_nodes, cfg, v_star=v_star)
+    wall = time.perf_counter() - t0
+    return {
+        "steps_to_streak": steps_to_streak(trace, k),
+        "steps_to_1pct": steps_to_tolerance(trace, 0.01),
+        "final_err": float(trace.subspace_error[-1]),
+        "final_streak": int(trace.streak[-1]),
+        "wall_s": wall,
+    }

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV rows (and nothing else)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_baselines, bench_cliques, bench_kernels,
+                            bench_linkpred, bench_mdp, bench_series_degree,
+                            bench_transforms, bench_walks)
+    mods = [
+        ("table2", bench_transforms),
+        ("fig2_3", bench_mdp),
+        ("fig4", bench_cliques),
+        ("fig5", bench_linkpred),
+        ("fig6", bench_series_degree),
+        ("sec4.3", bench_walks),
+        ("kernels", bench_kernels),
+        ("appB_baselines", bench_baselines),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in mods:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:  # keep the harness robust
+            failures += 1
+            print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

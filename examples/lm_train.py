@@ -1,0 +1,11 @@
+"""Train a reduced assigned-pool architecture end to end on the synthetic
+deterministic pipeline, with checkpoint/auto-resume (kill it mid-run and
+rerun: it continues from the last checkpoint).
+
+    PYTHONPATH=src python examples/lm_train.py
+"""
+from repro.launch.train import main
+
+main(["--mode", "lm", "--arch", "granite-moe-1b-a400m", "--smoke",
+      "--steps", "30", "--ckpt-dir", "/tmp/lm_train_ck",
+      "--ckpt-every", "10", "--log-every", "5"])

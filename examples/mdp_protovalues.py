@@ -1,0 +1,36 @@
+"""Proto-value functions for a 3-room grid-world MDP (paper Sec. 5.3).
+
+The bottom-k eigenvectors of the state-transition graph Laplacian are the
+proto-value functions (Mahadevan 2005).  SPED accelerates their
+computation; the PVFs' sign structure recovers the room partition.
+
+    PYTHONPATH=src python examples/mdp_protovalues.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SolverConfig, laplacian_dense, limit_neg_exp,
+                        run_solver, spectral_radius_upper_bound)
+from repro.core import graphs, metrics, operators
+
+g, rooms = graphs.three_room_mdp(s=1, h=10)
+print(f"grid world: {g.num_nodes} states, {g.num_edges} transitions")
+L = laplacian_dense(g)
+rho = float(spectral_radius_upper_bound(g))
+k = 4
+_, v_star = metrics.ground_truth_bottom_k(L, k)
+
+series = limit_neg_exp(251)
+op = operators.series_operator(series, operators.dense_matvec(L))
+cfg = SolverConfig(method="mu_eg", lr=0.4, steps=1200, eval_every=50, k=k)
+state, trace = run_solver(op, g.num_nodes, cfg, v_star=v_star)
+print(f"subspace error: {float(trace.subspace_error[-1]):.5f}, "
+      f"streak {int(trace.streak[-1])}/{k}")
+
+# The 2nd/3rd PVFs separate the rooms: check sign-based room recovery
+pvf = np.asarray(state.v)
+fiedler = pvf[:, 1]
+corr = abs(np.corrcoef(np.sign(fiedler), np.where(rooms == 1, 0.0,
+                                                  np.sign(rooms - 1)))[0, 1])
+print(f"|corr(sign(PVF_2), outer-vs-middle rooms)| = {corr:.3f}")

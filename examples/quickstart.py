@@ -1,0 +1,36 @@
+"""Quickstart: spectral clustering with SPED (the paper in ~40 lines).
+
+Builds a well-clustered graph, dilates its eigengaps with the paper's
+limit-series approximation of -e^{-L}, runs the stochastic mu-EigenGame
+solver to the bottom-k eigenvectors, k-means the embedding, and compares
+convergence against the identity (no-transform) baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (ClusteringConfig, SolverConfig, spectral_cluster)
+from repro.core import graphs
+from repro.core.kmeans import cluster_agreement
+from repro.core.solvers import steps_to_streak
+
+g, truth = graphs.clique_graph(200, 4, seed=0)
+print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, 4 planted cliques")
+
+for transform, lr in [("identity", 2e-2), ("limit_neg_exp", 0.4)]:
+    cfg = ClusteringConfig(
+        num_clusters=4,
+        transform=transform,
+        degree=251,              # paper Fig. 6's winning degree
+        auto_scale=False,        # paper-faithful: raw L
+        solver=SolverConfig(method="mu_eg", lr=lr, steps=2500,
+                            eval_every=25),
+        seed=0)
+    labels, info = spectral_cluster(g, cfg)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 4))
+    streak_at = steps_to_streak(info["trace"], cfg.num_clusters)
+    print(f"{transform:14s} accuracy={acc:.3f} "
+          f"full-eigenvector-streak at step {streak_at} "
+          f"(-1 = not within budget)")
+print("SPED reaches the ordered eigenvectors ~an order of magnitude "
+      "sooner (paper Figs. 2-4).")

@@ -1,0 +1,3 @@
+"""Arch configs for the assigned pool."""
+from repro.configs.base import ArchConfig  # noqa: F401
+from repro.configs.registry import ARCHS, SHAPES, get_arch, shape_applicable, smoke_config  # noqa: F401

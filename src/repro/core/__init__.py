@@ -1,0 +1,45 @@
+"""SPED core: stochastic parallelizable eigengap dilation (the paper's
+primary contribution) plus the spectral-clustering pipeline around it."""
+from repro.core.laplacian import (  # noqa: F401
+    EdgeIncidence,
+    EdgeList,
+    adjacency_dense,
+    build_edge_incidence,
+    degrees,
+    edge_inner_product,
+    incidence_matrix,
+    laplacian_dense,
+    laplacian_matvec,
+    make_edge_list,
+    minibatch_laplacian_matvec,
+    normalized_laplacian_dense,
+    spectral_radius_upper_bound,
+)
+from repro.core.series import (  # noqa: F401
+    SpectralSeries,
+    cheb_log,
+    cheb_neg_exp,
+    chebyshev,
+    identity_series,
+    limit_neg_exp,
+    taylor_log,
+    taylor_neg_exp,
+    with_lambda_star,
+)
+from repro.core.solvers import (  # noqa: F401
+    SolverConfig,
+    SolverState,
+    Trace,
+    init_state,
+    mu_eg_step,
+    oja_step,
+    run_solver,
+    steps_to_streak,
+    steps_to_tolerance,
+)
+from repro.core.clustering import (  # noqa: F401
+    ClusteringConfig,
+    build_series,
+    exact_cluster_reference,
+    spectral_cluster,
+)

@@ -1,0 +1,128 @@
+"""Baselines from the paper's related-work section (App. B), implemented
+so SPED's comparisons aren't only against the identity transform:
+
+* **Bethe Hessian** (Saade et al. 2014): H(r) = (r^2 - 1) I - r A + D,
+  r = sqrt(average branching ratio).  Spectral clustering for SBM graphs
+  uses the eigenvectors of H's NEGATIVE eigenvalues; detects communities
+  down to the detectability threshold where the plain Laplacian fails.
+* **Shift-and-invert power iteration** (Garber et al. 2016): find the
+  bottom eigenvector of L as the TOP eigenvector of (L + shift I)^{-1},
+  with the inverse applied via conjugate-gradient solves (matrix-free,
+  like SPED — but each operator application costs a CG solve instead of
+  a fixed polynomial).
+* **Lanczos** (reference eigensolver): exact-arithmetic ground truth for
+  graphs too large for dense eigh; used by tests/benchmarks as the
+  oracle at n >~ 4096.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.laplacian import EdgeList, adjacency_dense, degrees
+
+
+# --------------------------------------------------------------------------
+# Bethe Hessian (Saade et al. 2014)
+# --------------------------------------------------------------------------
+
+def bethe_hessian_dense(g: EdgeList, r: float | None = None) -> jax.Array:
+    """H(r) = (r^2 - 1) I - r A + D.  Default r = sqrt(sum d_i^2 / sum d_i
+    - 1) (the average branching ratio estimator from the paper)."""
+    a = adjacency_dense(g)
+    d = degrees(g)
+    if r is None:
+        r = float(jnp.sqrt(jnp.sum(d * d) / jnp.maximum(jnp.sum(d), 1e-9)
+                           - 1.0))
+    n = g.num_nodes
+    return (r * r - 1.0) * jnp.eye(n) - r * a + jnp.diag(d), r
+
+
+def bethe_hessian_cluster(g: EdgeList, num_clusters: int, seed: int = 0):
+    """Spectral clustering with the Bethe Hessian's bottom eigenvectors
+    (the negative-eigenvalue subspace carries community structure)."""
+    from repro.core.kmeans import kmeans
+    h, r = bethe_hessian_dense(g)
+    lam, vecs = jnp.linalg.eigh(h)
+    emb = vecs[:, :num_clusters]
+    emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True),
+                            1e-12)
+    res = kmeans(jax.random.PRNGKey(seed), emb, num_clusters)
+    return res.labels, {"r": r, "negative_eigs": int(jnp.sum(lam < 0))}
+
+
+# --------------------------------------------------------------------------
+# Shift-and-invert via CG (Garber et al. 2016)
+# --------------------------------------------------------------------------
+
+def cg_solve(matvec, b, x0=None, iters: int = 50, tol: float = 1e-6):
+    """Conjugate gradient for SPD matvec; panel-ready ((n, k) rhs)."""
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    p = r
+    rs = jnp.sum(r * r, axis=0)
+
+    def body(i, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        alpha = rs / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30)
+        x = x + alpha[None, :] * p
+        r = r - alpha[None, :] * ap
+        rs_new = jnp.sum(r * r, axis=0)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta[None, :] * p
+        return x, r, p, rs_new
+
+    x, r, p, rs = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
+    return x
+
+
+def shift_invert_operator(matvec, shift: float, cg_iters: int = 50):
+    """V -> (L + shift I)^{-1} V via CG — the Garber et al. preconditioner
+    as a solver-compatible operator (top-k of this = bottom-k of L)."""
+
+    def shifted(v):
+        return matvec(v) + shift * v
+
+    def op(v):
+        return cg_solve(shifted, v, iters=cg_iters)
+
+    return op
+
+
+# --------------------------------------------------------------------------
+# Lanczos reference eigensolver
+# --------------------------------------------------------------------------
+
+def lanczos_bottom_k(matvec, n: int, k: int, iters: int = 0,
+                     seed: int = 0):
+    """Bottom-k eigenpairs of a symmetric operator via the Lanczos
+    tridiagonalization with full reorthogonalization (host-precision
+    reference; not the scalable path — that's SPED's job)."""
+    iters = iters or min(n, max(4 * k, 64))
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(n,))
+    q /= np.linalg.norm(q)
+    qs = [q]
+    alphas, betas = [], []
+    for j in range(iters):
+        w = np.asarray(matvec(jnp.asarray(qs[-1], jnp.float32)),
+                       dtype=np.float64)
+        alpha = float(w @ qs[-1])
+        w = w - alpha * qs[-1] - (betas[-1] * qs[-2] if betas else 0.0)
+        # full reorthogonalization (stability)
+        for qq in qs:
+            w = w - (w @ qq) * qq
+        beta = float(np.linalg.norm(w))
+        alphas.append(alpha)
+        if beta < 1e-12 or j == iters - 1:
+            break
+        betas.append(beta)
+        qs.append(w / beta)
+    t = np.diag(alphas) + np.diag(betas, 1) + np.diag(betas, -1)
+    lam, s = np.linalg.eigh(t)
+    qmat = np.stack(qs, axis=1)  # (n, m)
+    vecs = qmat @ s[:, :k]
+    vecs /= np.linalg.norm(vecs, axis=0, keepdims=True)
+    return jnp.asarray(lam[:k], jnp.float32), jnp.asarray(vecs, jnp.float32)

@@ -1,0 +1,181 @@
+"""Distributed SPED: shard_map-parallel operators (paper Sec. 4.3's
+"d graph walkers, in parallel" + the stochastic optimization model).
+
+Parallelization axes:
+  * EDGES over the ("pod", "data") mesh axes — each device owns a shard
+    of the incidence rows; a Laplacian matvec is a local edge-wise
+    gather/scatter followed by ONE psum of the (n, k) panel.  This is the
+    same collective footprint as data-parallel gradient aggregation, so
+    the LM substrate's mesh/runtime is reused unchanged.
+  * WALKERS over the same axes — each device runs an independent batch of
+    incidence-graph walks (vmapped), contributions are psum-averaged.
+    Any subset of walkers yields an unbiased estimate (Sec. 4.3), which
+    is what makes the scheme straggler-tolerant: a backup-task scheme can
+    drop slow walkers' contributions without bias (DESIGN.md Sec. 5).
+
+The eigenvector panel V (n, k) is replicated; for very large n it can be
+node-sharded over "model" (see shard_v_spec) — the solver's QR then runs
+on gathered panels, which is fine for k <= a few hundred.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.laplacian import EdgeIncidence, EdgeList
+from repro.core.series import SpectralSeries
+from repro.core import walks as walks_mod
+
+
+def pad_edges_for_mesh(g: EdgeList, num_shards: int) -> EdgeList:
+    """Pad the edge list with zero-weight self-loop-free dummy edges so it
+    divides evenly across shards (zero weight => no contribution)."""
+    e = g.num_edges
+    rem = (-e) % num_shards
+    if rem == 0:
+        return g
+    pad_src = jnp.zeros((rem,), jnp.int32)
+    pad_dst = jnp.ones((rem,), jnp.int32)
+    return EdgeList(
+        src=jnp.concatenate([g.src, pad_src]),
+        dst=jnp.concatenate([g.dst, pad_dst]),
+        weight=jnp.concatenate([g.weight, jnp.zeros((rem,), jnp.float32)]),
+        num_nodes=g.num_nodes,
+    )
+
+
+def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",)):
+    """Returns matvec(src, dst, w, v) -> L @ v with edges sharded over
+    `edge_axes` and v replicated; one psum over the edge axes."""
+    spec_e = P(edge_axes)
+    spec_v = P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_e, spec_v),
+        out_specs=spec_v)
+    def mv(src, dst, w, v):
+        diff = v[src] - v[dst]
+        wdiff = w[:, None] * diff if v.ndim > 1 else w * diff
+        out = jnp.zeros_like(v)
+        out = out.at[src].add(wdiff)
+        out = out.at[dst].add(-wdiff)
+        return jax.lax.psum(out, edge_axes)
+
+    return mv
+
+
+def distributed_series_operator(
+    mesh: Mesh,
+    g: EdgeList,
+    series: SpectralSeries,
+    edge_axes=("data",),
+):
+    """Deterministic distributed operator: V -> (lambda* I - S(L)) V.
+
+    Edges are padded + sharded once; each of the series' `degree` matvecs
+    costs one psum of the (n, k) panel.
+    """
+    num_shards = 1
+    for a in edge_axes:
+        num_shards *= mesh.shape[a]
+    gp = pad_edges_for_mesh(g, num_shards)
+    mv = sharded_laplacian_matvec(mesh, edge_axes)
+
+    def op(v: jax.Array) -> jax.Array:
+        return series.apply_reversed(
+            lambda u: mv(gp.src, gp.dst, gp.weight, u), v)
+
+    return op
+
+
+def distributed_minibatch_operator(
+    mesh: Mesh,
+    g: EdgeList,
+    series: SpectralSeries,
+    batch_edges_per_device: int,
+    edge_axes=("data",),
+):
+    """Stochastic distributed operator (the paper's scaling model):
+    every device samples an INDEPENDENT minibatch of edges per inner
+    matvec; the psum'd average stays unbiased and variance shrinks
+    linearly in the device count.
+    """
+    e = g.num_edges
+    spec_r = P(edge_axes)  # per-device keys stacked on the edge axes
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_r, P()),
+        out_specs=P())
+    def mb_mv(keys, v):
+        key = keys[0]
+        sel = jax.random.randint(key, (batch_edges_per_device,), 0, e)
+        w = g.weight[sel] * (e / batch_edges_per_device)
+        diff = v[g.src[sel]] - v[g.dst[sel]]
+        out = jnp.zeros_like(v)
+        out = out.at[g.src[sel]].add(w[:, None] * diff)
+        out = out.at[g.dst[sel]].add(-w[:, None] * diff)
+        return jax.lax.pmean(out, edge_axes)
+
+    num_shards = 1
+    for a in edge_axes:
+        num_shards *= mesh.shape[a]
+
+    def op(key: jax.Array, v: jax.Array) -> jax.Array:
+        def keyed_mv(k, u):
+            dev_keys = jax.random.split(k, num_shards)
+            return mb_mv(dev_keys, u)
+        return series.apply_reversed_stochastic(keyed_mv, key, v)
+
+    return op
+
+
+def distributed_walk_operator(
+    mesh: Mesh,
+    g: EdgeList,
+    inc: EdgeIncidence,
+    coeffs: tuple[float, ...],
+    lambda_star: float,
+    walkers_per_device: int,
+    edge_axes=("data",),
+    mode: str = "importance",
+):
+    """Paper Sec. 4.3 fully realized: d devices x W walkers, in parallel.
+
+    Each device samples walkers_per_device independent incidence-graph
+    walks and computes its local power estimates; pmean over devices
+    averages the unbiased per-device estimates.
+    """
+    deg = len(coeffs) - 1
+    spec_r = P(edge_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(spec_r, P()), out_specs=P(),
+        check_vma=False)  # scan carries mix varying/unvarying init values
+    def walk_apply(keys, v):
+        key = keys[0]
+        wb = walks_mod.sample_walks(key, inc, walkers_per_device, max(deg, 2))
+        acc = coeffs[0] * v
+        for p in range(1, deg + 1):
+            est = walks_mod.estimate_power_matvec(
+                wb, g, inc, p, v, mode=mode,
+                key=jax.random.fold_in(key, 1000 + p) if mode == "rejection"
+                else None)
+            acc = acc + coeffs[p] * est
+        return jax.lax.pmean(acc, edge_axes)
+
+    num_shards = 1
+    for a in edge_axes:
+        num_shards *= mesh.shape[a]
+
+    def op(key: jax.Array, v: jax.Array) -> jax.Array:
+        dev_keys = jax.random.split(key, num_shards)
+        return lambda_star * v - walk_apply(dev_keys, v)
+
+    return op

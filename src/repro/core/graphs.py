@@ -1,0 +1,142 @@
+"""Graph generators used in the paper's experiments (Sec. 5, App. A).
+
+- three_room_mdp: Fig. 1 grid world (3 rooms joined by small doors) whose
+  state-transition graph yields proto-value functions (Sec. 5.3).
+- clique_graph: k cliques joined by 0..25 random short-circuit edges
+  (Sec. 5.4).
+- sbm_graph: stochastic block model (referenced via Saade et al. / SBM
+  discussion in App. B) — used for property tests.
+
+Generators are host-side numpy (graph construction is data prep, not a
+jit region) and return EdgeList plus ground-truth cluster labels where
+defined.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.laplacian import EdgeList, make_edge_list
+
+
+def three_room_mdp(s: int = 2, h: int = 10):
+    """3-room grid world, 10s+1 cells tall, 30s+1 cells wide (paper Fig. 1).
+
+    Two interior walls split the width into 3 equal rooms; each wall has a
+    door of height ceil((10s+1)/h) centered vertically.  Nodes are cells,
+    undirected edges are the 4-neighbour transitions.
+
+    Returns (EdgeList, labels) with labels = room index per cell.
+    """
+    height = 10 * s + 1
+    width = 30 * s + 1
+    room_w = width // 3  # wall sits between columns room_w-1 / room_w (x2)
+    door_h = max(1, (height + h - 1) // h)
+    door_lo = (height - door_h) // 2
+    door_hi = door_lo + door_h  # exclusive
+
+    def node(r, c):
+        return r * width + c
+
+    edges = []
+    for r in range(height):
+        for c in range(width):
+            # vertical edge down
+            if r + 1 < height:
+                edges.append((node(r, c), node(r + 1, c)))
+            # horizontal edge right, unless crossing a wall outside the door
+            if c + 1 < width:
+                crossing_wall = (c + 1) % room_w == 0 and (c + 1) // room_w in (1, 2) \
+                    and (c + 1) < width
+                if crossing_wall and not (door_lo <= r < door_hi):
+                    continue
+                edges.append((node(r, c), node(r, c + 1)))
+    labels = np.zeros((height * width,), dtype=np.int32)
+    for r in range(height):
+        for c in range(width):
+            labels[node(r, c)] = min(c // room_w, 2)
+    g = make_edge_list(np.asarray(edges, dtype=np.int32), height * width)
+    return g, labels
+
+
+def clique_graph(
+    num_nodes: int,
+    num_cliques: int,
+    seed: int = 0,
+    max_short_circuit: int = 25,
+):
+    """k cliques of ~n/k nodes + 0..25 random cross edges per clique pair.
+
+    Paper Sec. 5.4.  Returns (EdgeList, labels).
+    """
+    rng = np.random.default_rng(seed)
+    sizes = np.full((num_cliques,), num_nodes // num_cliques, dtype=np.int64)
+    sizes[: num_nodes % num_cliques] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    edges = []
+    labels = np.zeros((num_nodes,), dtype=np.int32)
+    for k in range(num_cliques):
+        lo, hi = int(starts[k]), int(starts[k + 1])
+        labels[lo:hi] = k
+        members = np.arange(lo, hi)
+        iu = np.triu_indices(len(members), k=1)
+        edges.append(np.stack([members[iu[0]], members[iu[1]]], axis=1))
+    # short circuits between every pair of cliques
+    seen = set()
+    cross = []
+    for a in range(num_cliques):
+        for b in range(a + 1, num_cliques):
+            m = int(rng.integers(0, max_short_circuit + 1))
+            for _ in range(m):
+                i = int(rng.integers(starts[a], starts[a + 1]))
+                j = int(rng.integers(starts[b], starts[b + 1]))
+                if (i, j) not in seen:
+                    seen.add((i, j))
+                    cross.append((i, j))
+    if cross:
+        edges.append(np.asarray(cross, dtype=np.int64))
+    all_edges = np.concatenate(edges, axis=0).astype(np.int32)
+    g = make_edge_list(all_edges, num_nodes)
+    return g, labels
+
+
+def sbm_graph(
+    num_nodes: int,
+    num_blocks: int,
+    p_in: float = 0.5,
+    p_out: float = 0.01,
+    seed: int = 0,
+):
+    """Stochastic block model (Holland et al. 1983).  Returns (EdgeList, labels)."""
+    rng = np.random.default_rng(seed)
+    labels = np.sort(rng.integers(0, num_blocks, size=num_nodes)).astype(np.int32)
+    iu = np.triu_indices(num_nodes, k=1)
+    same = labels[iu[0]] == labels[iu[1]]
+    p = np.where(same, p_in, p_out)
+    mask = rng.random(len(p)) < p
+    edges = np.stack([iu[0][mask], iu[1][mask]], axis=1).astype(np.int32)
+    # ensure no isolated nodes (attach to a random same-block partner)
+    present = np.zeros(num_nodes, bool)
+    present[edges.ravel()] = True
+    extra = []
+    for v in np.nonzero(~present)[0]:
+        u = (v + 1) % num_nodes
+        extra.append((min(u, v), max(u, v)))
+    if extra:
+        edges = np.concatenate([edges, np.asarray(extra, np.int32)], axis=0)
+    return make_edge_list(edges, num_nodes), labels
+
+
+def ring_of_cliques(num_cliques: int, clique_size: int):
+    """Deterministic well-clustered graph for exact tests."""
+    n = num_cliques * clique_size
+    edges = []
+    labels = np.zeros((n,), dtype=np.int32)
+    for k in range(num_cliques):
+        lo = k * clique_size
+        labels[lo: lo + clique_size] = k
+        for i in range(clique_size):
+            for j in range(i + 1, clique_size):
+                edges.append((lo + i, lo + j))
+        nxt = ((k + 1) % num_cliques) * clique_size
+        edges.append((min(lo, nxt), max(lo, nxt)))
+    return make_edge_list(np.asarray(edges, np.int32), n), labels

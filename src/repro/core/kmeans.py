@@ -1,0 +1,92 @@
+"""jit-friendly k-means (Lloyd's + k-means++ init, vmapped restarts).
+
+Used for the final "hard clustering" step of spectral clustering
+(paper Sec. 1/2.1).  Pure jnp so the whole clustering pipeline jits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, d)
+    labels: jax.Array  # (n,)
+    inertia: jax.Array  # scalar
+
+
+def _plusplus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding."""
+    n = x.shape[0]
+    key, sub = jax.random.split(key)
+    first = jax.random.randint(sub, (), 0, n)
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        key, centroids = carry
+        d2 = jnp.min(
+            jnp.sum((x[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+            + jnp.where(jnp.arange(k)[None, :] >= i, jnp.inf, 0.0),
+            axis=1,
+        )
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
+        idx = jax.random.choice(sub, x.shape[0], p=probs)
+        return key, centroids.at[i].set(x[idx])
+
+    _, centroids = jax.lax.fori_loop(1, k, body, (key, centroids))
+    return centroids
+
+
+def _lloyd(x: jax.Array, centroids: jax.Array, iters: int) -> KMeansResult:
+    k = centroids.shape[0]
+
+    def body(_, c):
+        d2 = jnp.sum((x[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+        labels = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(labels, k, dtype=x.dtype)  # (n, k)
+        counts = jnp.sum(onehot, axis=0)  # (k,)
+        sums = onehot.T @ x  # (k, d)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None], c)
+        return new
+
+    centroids = jax.lax.fori_loop(0, iters, body, centroids)
+    d2 = jnp.sum((x[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    labels = jnp.argmin(d2, axis=1)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return KMeansResult(centroids=centroids, labels=labels, inertia=inertia)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "restarts"))
+def kmeans(key: jax.Array, x: jax.Array, k: int,
+           iters: int = 25, restarts: int = 8) -> KMeansResult:
+    """Best-of-`restarts` k-means (vmapped)."""
+    keys = jax.random.split(key, restarts)
+    inits = jax.vmap(lambda kk: _plusplus_init(kk, x, k))(keys)
+    results = jax.vmap(lambda c: _lloyd(x, c, iters))(inits)
+    best = jnp.argmin(results.inertia)
+    return KMeansResult(
+        centroids=results.centroids[best],
+        labels=results.labels[best],
+        inertia=results.inertia[best],
+    )
+
+
+def cluster_agreement(labels: jax.Array, truth: jax.Array, k: int) -> jax.Array:
+    """Greedy-matching clustering accuracy in [0, 1] (label-permutation
+    invariant, adequate for well-separated test graphs)."""
+    conf = jnp.zeros((k, k))
+    conf = conf.at[labels, truth].add(1.0)
+    # greedy assignment: repeatedly take the max cell
+    def body(_, carry):
+        conf, acc = carry
+        idx = jnp.argmax(conf)
+        i, j = idx // k, idx % k
+        acc = acc + conf[i, j]
+        conf = conf.at[i, :].set(-1.0).at[:, j].set(-1.0)
+        return conf, acc
+    _, acc = jax.lax.fori_loop(0, k, body, (conf, 0.0))
+    return acc / labels.shape[0]

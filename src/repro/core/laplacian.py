@@ -1,0 +1,198 @@
+"""Graph Laplacian construction and matrix-free operators.
+
+The paper (Sec. 2) works with L = D - A = X^T X where X is the edge
+incidence matrix: row x_e for edge e=(i,j), i<j, has +1 at index i and
+-1 at index j.  Weighted graphs use L = X^T W X.
+
+Everything here is jnp and jit-friendly.  Edge lists are int32 arrays of
+shape (E, 2) with column 0 < column 1 (canonicalized on construction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EdgeList(NamedTuple):
+    """Canonical edge representation: src < dst per row, optional weights."""
+
+    src: jax.Array  # (E,) int32, src < dst
+    dst: jax.Array  # (E,) int32
+    weight: jax.Array  # (E,) float32
+    num_nodes: int  # static
+
+    @property
+    def num_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def make_edge_list(edges, num_nodes: int, weights=None) -> EdgeList:
+    """Canonicalize an (E, 2) array of node pairs into an EdgeList."""
+    edges = jnp.asarray(edges, dtype=jnp.int32)
+    src = jnp.minimum(edges[:, 0], edges[:, 1])
+    dst = jnp.maximum(edges[:, 0], edges[:, 1])
+    if weights is None:
+        weights = jnp.ones((edges.shape[0],), dtype=jnp.float32)
+    else:
+        weights = jnp.asarray(weights, dtype=jnp.float32)
+    return EdgeList(src=src, dst=dst, weight=weights, num_nodes=int(num_nodes))
+
+
+def incidence_matrix(g: EdgeList) -> jax.Array:
+    """Dense incidence matrix X (E x N): +1 at min index, -1 at max index."""
+    e = g.num_edges
+    x = jnp.zeros((e, g.num_nodes), dtype=jnp.float32)
+    rows = jnp.arange(e)
+    x = x.at[rows, g.src].set(1.0)
+    x = x.at[rows, g.dst].set(-1.0)
+    return x
+
+
+def adjacency_dense(g: EdgeList) -> jax.Array:
+    a = jnp.zeros((g.num_nodes, g.num_nodes), dtype=jnp.float32)
+    a = a.at[g.src, g.dst].add(g.weight)
+    a = a.at[g.dst, g.src].add(g.weight)
+    return a
+
+
+def degrees(g: EdgeList) -> jax.Array:
+    d = jnp.zeros((g.num_nodes,), dtype=jnp.float32)
+    d = d.at[g.src].add(g.weight)
+    d = d.at[g.dst].add(g.weight)
+    return d
+
+
+def laplacian_dense(g: EdgeList) -> jax.Array:
+    """L = D - A, symmetric PSD.  Equals X^T diag(w) X (tested)."""
+    a = adjacency_dense(g)
+    return jnp.diag(jnp.sum(a, axis=1)) - a
+
+
+def normalized_laplacian_dense(g: EdgeList, eps: float = 1e-12) -> jax.Array:
+    a = adjacency_dense(g)
+    d = jnp.sum(a, axis=1)
+    inv_sqrt = jnp.where(d > 0, jax.lax.rsqrt(jnp.maximum(d, eps)), 0.0)
+    return jnp.eye(g.num_nodes) - (inv_sqrt[:, None] * a) * inv_sqrt[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Matrix-free Laplacian matvec from edge lists.
+# ---------------------------------------------------------------------------
+
+def laplacian_matvec(g: EdgeList, v: jax.Array) -> jax.Array:
+    """L @ v computed edge-wise: sum_e w_e * x_e (x_e^T v).
+
+    v: (N,) or (N, K).  Cost O(E*K); never materializes L.
+    """
+    diff = v[g.src] - v[g.dst]  # (E,) or (E, K) == X @ v
+    if diff.ndim == 1:
+        wdiff = g.weight * diff
+    else:
+        wdiff = g.weight[:, None] * diff
+    out = jnp.zeros_like(v)
+    out = out.at[g.src].add(wdiff)
+    out = out.at[g.dst].add(-wdiff)
+    return out
+
+
+def minibatch_laplacian_matvec(
+    src: jax.Array, dst: jax.Array, weight: jax.Array, v: jax.Array,
+    num_edges_total: int,
+) -> jax.Array:
+    """Unbiased estimate of L @ v from a minibatch of B edges.
+
+    E[ (E_total / B) * sum_{e in batch} w_e x_e x_e^T v ] = L v  when edges
+    are drawn uniformly with replacement.  This is the stochastic
+    optimization model of the paper (Sec. 3): batches of edge vectors x_e.
+    """
+    b = src.shape[0]
+    diff = v[src] - v[dst]
+    wdiff = (weight * (num_edges_total / b))[:, None] * jnp.atleast_2d(diff.T).T
+    if v.ndim == 1:
+        wdiff = wdiff[:, 0]
+    out = jnp.zeros_like(v)
+    out = out.at[src].add(wdiff)
+    out = out.at[dst].add(-wdiff)
+    return out
+
+
+def spectral_radius_upper_bound(g: EdgeList) -> jax.Array:
+    """lambda_max(L) <= 2 * max weighted degree (paper Sec. 5.4)."""
+    return 2.0 * jnp.max(degrees(g))
+
+
+# ---------------------------------------------------------------------------
+# Edge incidence graph (Sec. 4.3, Table 1).
+# ---------------------------------------------------------------------------
+
+def edge_inner_product(si, di, sj, dj) -> jax.Array:
+    """x_ei^T x_ej per Table 1 of the paper.
+
+    repeated -> 2; serial (share one node at 'opposite signs') -> -1;
+    converging/diverging (share one node at 'same sign') -> +1;
+    disconnected -> 0.  Signs follow the min/max encoding: +1 at src=min,
+    -1 at dst=max.
+    """
+    si, di, sj, dj = (jnp.asarray(a) for a in (si, di, sj, dj))
+    ip = (
+        (si == sj).astype(jnp.float32)  # +1 * +1
+        + (di == dj).astype(jnp.float32)  # -1 * -1
+        - (si == dj).astype(jnp.float32)  # +1 * -1
+        - (di == sj).astype(jnp.float32)  # -1 * +1
+    )
+    return ip
+
+
+class EdgeIncidence(NamedTuple):
+    """Padded adjacency of the edge incidence graph.
+
+    Node u of this graph = edge u of the original graph.  Two edges are
+    adjacent iff they share an endpoint; every edge also has a self loop
+    (paper footnote 1).  `nbrs[e, :deg[e]]` lists neighbours, padded with
+    `e` itself (padding never sampled because indices are drawn < deg).
+    """
+
+    nbrs: jax.Array  # (E, max_deg) int32
+    deg: jax.Array  # (E,) int32 — degree in the incidence graph (incl. self loop)
+    ip: jax.Array  # (E, max_deg) float32 — x_e^T x_nbr per slot
+    deg_star_inc: int  # static upper bound 2*deg*-1 on incidence degree
+
+
+def build_edge_incidence(g: EdgeList) -> EdgeIncidence:
+    """Host-side (numpy) construction of the padded incidence-graph adjacency."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    e = src.shape[0]
+    n = g.num_nodes
+    node2edges: list[list[int]] = [[] for _ in range(n)]
+    for idx in range(e):
+        node2edges[src[idx]].append(idx)
+        node2edges[dst[idx]].append(idx)
+    nbr_lists = []
+    for idx in range(e):
+        s = set(node2edges[src[idx]]) | set(node2edges[dst[idx]])
+        s.add(idx)  # self loop
+        nbr_lists.append(sorted(s))
+    max_deg = max(len(l) for l in nbr_lists)
+    nbrs = np.full((e, max_deg), 0, dtype=np.int32)
+    deg = np.zeros((e,), dtype=np.int32)
+    for idx, l in enumerate(nbr_lists):
+        nbrs[idx, : len(l)] = l
+        deg[idx] = len(l)
+        nbrs[idx, len(l):] = idx  # pad with self (never sampled)
+    nbrs_j = jnp.asarray(nbrs)
+    deg_j = jnp.asarray(deg)
+    ip = edge_inner_product(
+        g.src[:, None], g.dst[:, None], g.src[nbrs_j], g.dst[nbrs_j]
+    )
+    node_deg = np.zeros((n,), np.int64)
+    np.add.at(node_deg, src, 1)
+    np.add.at(node_deg, dst, 1)
+    deg_star = int(node_deg.max()) if e else 1
+    return EdgeIncidence(
+        nbrs=nbrs_j, deg=deg_j, ip=ip, deg_star_inc=2 * deg_star - 1
+    )

@@ -1,0 +1,101 @@
+"""Solver-facing operator builders.
+
+An "operator" is a function V -> A @ V (optionally keyed for stochastic
+estimates) where A = lambda* I - S(L) is the transformed + reversed
+Laplacian (Eqs. 8, Table 2).  This module wires together:
+
+  laplacian matvec  x  spectral series  x  estimation mode
+
+into the matvec consumed by :mod:`repro.core.solvers`.
+
+Estimation modes:
+  * exact dense    — L as a dense matrix (small graphs, paper Sec. 5)
+  * edge matvec    — matrix-free full-batch, O(E k) per matvec
+  * minibatch      — unbiased stochastic minibatch of edges per matvec
+                     (the paper's stochastic optimization model, Sec. 3)
+  * walks          — the Sec. 4.3 random-walk estimator of L^l, see
+                     :mod:`repro.core.walks`
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import laplacian as lap
+from repro.core.series import SpectralSeries
+
+MatVec = Callable[[jax.Array], jax.Array]
+
+
+def dense_matvec(l_mat: jax.Array) -> MatVec:
+    return lambda v: l_mat @ v
+
+
+def edge_matvec(g: lap.EdgeList) -> MatVec:
+    return functools.partial(lap.laplacian_matvec, g)
+
+
+def series_operator(series: SpectralSeries, matvec: MatVec) -> MatVec:
+    """V -> (lambda* I - S(L)) V, deterministic."""
+    return lambda v: series.apply_reversed(matvec, v)
+
+
+def exact_operator(series_or_transform, l_mat: jax.Array) -> MatVec:
+    """Exact f(L) via eigh — the paper's green 'exact' curves.
+
+    Accepts either a SpectralSeries (uses its scalar map) or a
+    transforms.Transform.
+    """
+    lam, vecs = jnp.linalg.eigh(l_mat)
+    if hasattr(series_or_transform, "reversed_scalar"):
+        f_lam = series_or_transform.reversed_scalar(lam)
+    else:  # transforms.Transform
+        rho = lam[-1]
+        f_lam = series_or_transform.lambda_star(rho) - series_or_transform.scalar(lam)
+    a = (vecs * f_lam[None, :]) @ vecs.T
+
+    return lambda v: a @ v
+
+
+def minibatch_operator(
+    g: lap.EdgeList,
+    series: SpectralSeries,
+    batch_edges: int,
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Stochastic operator: each inner Laplacian matvec uses an
+    independent uniform minibatch of edges (unbiased for L, and since
+    successive matvecs use independent batches, each monomial estimate
+    E[L_b1 ... L_bi] = L^i is unbiased — the product of independent
+    unbiased factors).
+
+    Returns op(key, V).
+    """
+    e = g.num_edges
+
+    def keyed_mv(k: jax.Array, u: jax.Array) -> jax.Array:
+        sel = jax.random.randint(k, (batch_edges,), 0, e)
+        return lap.minibatch_laplacian_matvec(
+            g.src[sel], g.dst[sel], g.weight[sel], u, e)
+
+    def op(key: jax.Array, v: jax.Array) -> jax.Array:
+        return series.apply_reversed_stochastic(keyed_mv, key, v)
+
+    return op
+
+
+def scaled_series_for_graph(
+    g: lap.EdgeList, series_fn, degree: int, target_radius: float = 1.0
+):
+    """Beyond-paper helper: pre-scale L by target_radius/rho_ub so a fixed-
+    degree series stays accurate regardless of the graph's max degree —
+    this addresses the paper's Fig. 4 failure mode (series under-resolved
+    when deg* blows up).  Scaling L preserves eigenvectors and ORDER, so
+    it is itself an eigenvector-preserving transform.
+    """
+    rho_ub = float(lap.spectral_radius_upper_bound(g))
+    scale = target_radius / max(rho_ub, 1e-30)
+    return series_fn(degree, scale=scale) if "scale" in series_fn.__code__.co_varnames \
+        else series_fn(degree)

@@ -1,0 +1,263 @@
+"""Series approximations to spectrum transforms (paper Sec. 4.2, Table 2).
+
+Each series S provides ``apply(matvec, v)`` computing S(L) @ v with
+``degree`` Laplacian matvecs of an (n, k) panel — never an n x n product —
+plus ``scalar(lam)`` (the induced spectral map, for analysis/tests) and a
+reversal shift ``lambda_star`` folding in Eq. (8).
+
+Numerical note: a degree-251 polynomial CANNOT be evaluated in the power
+basis (binomial coefficients ~1e74 with alternating signs).  Every series
+here is evaluated with its numerically stable recurrence:
+
+  * ``taylor_log``:     log(L+eps I) ~ sum (-1)^{i+1} M^i / i,
+                        M = L-(1-eps)I; recurrence  m <- M m   (Table 2)
+  * ``taylor_neg_exp``: -e^{-L} ~ -sum (-L)^i / i!;
+                        recurrence  t <- -(L t)/i              (Table 2)
+  * ``limit_neg_exp``:  -(I - L/l)^l, l odd;
+                        recurrence  u <- u - (L u)/l, l times  (Table 2)
+  * ``cheb``:           beyond-paper Chebyshev fit of any scalar map on
+                        [0, rho] via the Clenshaw recurrence.
+
+``limit_neg_exp`` is the paper's best performer (Fig. 6): with l odd,
+x -> -(1 - x/l)^l is monotone increasing on ALL of R, so it never folds
+the spectrum regardless of the spectral radius.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MatVec = Callable[[jax.Array], jax.Array]
+# Internal convention: series bodies call an INDEXED matvec mv(i, u) where i
+# is the (traced) position of the matvec within the polynomial evaluation.
+# Deterministic operators ignore i; stochastic operators fold i into their
+# PRNG key so every monomial factor uses a fresh, independent minibatch
+# (required for the unbiasedness argument of paper Sec. 4.3).
+IndexedMatVec = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralSeries:
+    """A polynomial spectral map with a stable matrix-free evaluator.
+
+    apply_fn(matvec, v) -> S(L) v ;  scalar_fn(lam) -> s(lam).
+    The solver-facing operator is ``lambda_star * v - apply(matvec, v)``
+    (Eq. 8 reversal: bottom-k of L become top-k).
+    """
+
+    name: str
+    degree: int
+    apply_fn: Callable[[IndexedMatVec, jax.Array], jax.Array]
+    scalar_fn: Callable[[jax.Array], jax.Array]
+    lambda_star: float = 0.0
+
+    def apply(self, matvec: MatVec, v: jax.Array) -> jax.Array:
+        return self.apply_fn(lambda i, u: matvec(u), v)
+
+    def apply_stochastic(self, keyed_matvec, key: jax.Array,
+                         v: jax.Array) -> jax.Array:
+        """Each internal matvec gets an independent fold_in(key, i) key."""
+        return self.apply_fn(
+            lambda i, u: keyed_matvec(jax.random.fold_in(key, i), u), v)
+
+    def apply_reversed_stochastic(self, keyed_matvec, key, v):
+        return self.lambda_star * v - self.apply_stochastic(keyed_matvec, key, v)
+
+    def scalar(self, lam) -> jax.Array:
+        return self.scalar_fn(jnp.asarray(lam))
+
+    def apply_reversed(self, matvec: MatVec, v: jax.Array) -> jax.Array:
+        return self.lambda_star * v - self.apply(matvec, v)
+
+    def reversed_scalar(self, lam) -> jax.Array:
+        return self.lambda_star - self.scalar(lam)
+
+
+def identity_series() -> SpectralSeries:
+    """No-op series paired with a reversal shift chosen by the caller via
+    `with_lambda_star` — the paper's 'identity transformation' baseline."""
+    return SpectralSeries(
+        name="identity", degree=1,
+        apply_fn=lambda mv, v: mv(jnp.zeros((), jnp.int32), v),
+        scalar_fn=lambda lam: lam,
+        lambda_star=0.0,
+    )
+
+
+def with_lambda_star(s: SpectralSeries, lambda_star: float) -> SpectralSeries:
+    return dataclasses.replace(s, lambda_star=float(lambda_star))
+
+
+def limit_neg_exp(degree: int, scale: float = 1.0) -> SpectralSeries:
+    """-(I - s L/l)^l  (Table 2, l odd): u <- u - s (L u)/l, repeated l times.
+
+    `scale` s evaluates f(s lam) — beyond-paper knob to center the dilation
+    on the bottom of the spectrum when rho(L) is large.
+    """
+    if degree % 2 == 0:
+        raise ValueError("degree must be odd (paper Table 2: l is odd)")
+    c = scale / degree
+
+    def apply_fn(mv: IndexedMatVec, v: jax.Array) -> jax.Array:
+        def body(i, u):
+            return u - c * mv(i, u)
+        return -jax.lax.fori_loop(0, degree, body, v)
+
+    def scalar_fn(lam):
+        return -((1.0 - c * lam) ** degree)
+
+    return SpectralSeries(
+        name=f"limit_neg_exp_d{degree}" + ("" if scale == 1.0 else f"_s{scale:g}"),
+        degree=degree, apply_fn=apply_fn, scalar_fn=scalar_fn,
+        lambda_star=0.0,  # series < ... <= max 0-ish; top-k solver safe with 0
+    )
+
+
+def taylor_neg_exp(degree: int) -> SpectralSeries:
+    """-sum_{i=0}^{l} (-L)^i / i!  (Table 2), term recurrence t <- -(L t)/i."""
+    if degree % 2 == 0:
+        raise ValueError("degree must be odd (paper Table 2: l is odd)")
+
+    def apply_fn(mv: IndexedMatVec, v: jax.Array) -> jax.Array:
+        def body(i, carry):
+            term, acc = carry
+            term = -mv(i, term) / i.astype(v.dtype)
+            return term, acc + term
+        _, acc = jax.lax.fori_loop(
+            1, degree + 1, body, (v, v))
+        return -acc
+
+    def scalar_fn(lam):
+        lam = jnp.asarray(lam)
+        term = jnp.ones_like(lam)
+        acc = jnp.ones_like(lam)
+        for i in range(1, degree + 1):
+            term = -lam * term / i
+            acc = acc + term
+        return -acc
+
+    return SpectralSeries(
+        name=f"taylor_neg_exp_d{degree}", degree=degree,
+        apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=0.0,
+    )
+
+
+def taylor_log(degree: int, eps: float = 1e-2,
+               lambda_star: float = 0.0) -> SpectralSeries:
+    """sum_{i=1}^{l} (-1)^{i+1} M^i / i,  M = L + (eps-1) I  (Table 2).
+
+    Convergent only for rho(M) < 1, i.e. spectrum of L within
+    (0-ish, 2-eps) — the paper notes it cannot find an accurate series
+    over a general Laplacian's full spectrum (Sec. 5.3); we expose it for
+    the normalized Laplacian regime where rho <= 2.
+    """
+    a = eps - 1.0
+
+    def apply_fn(mv: IndexedMatVec, v: jax.Array) -> jax.Array:
+        def body(i, carry):
+            m, acc = carry  # m = M^{i-1} v
+            m = mv(i, m) + a * m  # M^i v
+            sign = jnp.where(i % 2 == 1, 1.0, -1.0).astype(v.dtype)
+            return m, acc + (sign / i.astype(v.dtype)) * m
+        _, acc = jax.lax.fori_loop(1, degree + 1, body, (v, jnp.zeros_like(v)))
+        return acc
+
+    def scalar_fn(lam):
+        lam = jnp.asarray(lam)
+        m = jnp.ones_like(lam)
+        acc = jnp.zeros_like(lam)
+        for i in range(1, degree + 1):
+            m = (lam + a) * m
+            acc = acc + ((-1.0) ** (i + 1)) / i * m
+        return acc
+
+    return SpectralSeries(
+        name=f"taylor_log_d{degree}_eps{eps:g}", degree=degree,
+        apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=lambda_star,
+    )
+
+
+def chebyshev(
+    fn: Callable[[np.ndarray], np.ndarray],
+    degree: int,
+    lo: float,
+    hi: float,
+    name: str = "cheb",
+    lambda_star: float | None = None,
+) -> SpectralSeries:
+    """Beyond-paper: Chebyshev interpolant of `fn` on [lo, hi], applied via
+    the Clenshaw recurrence (3 live panels, `degree` matvecs, stable at any
+    degree).  Needs far lower degree than Taylor for the same accuracy —
+    this repairs the paper's observed Taylor-log failure (Sec. 5.3).
+    """
+    j = np.arange(degree + 1)
+    nodes_t = np.cos(np.pi * (j + 0.5) / (degree + 1))
+    x = 0.5 * (hi - lo) * nodes_t + 0.5 * (hi + lo)
+    f = fn(x)
+    c = np.empty(degree + 1)
+    for i in range(degree + 1):
+        c[i] = 2.0 / (degree + 1) * np.sum(
+            f * np.cos(np.pi * i * (j + 0.5) / (degree + 1)))
+    c[0] *= 0.5
+    coeffs = jnp.asarray(c, dtype=jnp.float32)
+    alpha = 2.0 / (hi - lo)
+    beta = -(hi + lo) / (hi - lo)
+
+    def apply_fn(mv: IndexedMatVec, v: jax.Array) -> jax.Array:
+        # Clenshaw: b_k = c_k + 2 t(L) b_{k+1} - b_{k+2}
+        def t_op(i, u):
+            return alpha * mv(i, u) + beta * u
+
+        def body(idx, carry):
+            b1, b2 = carry
+            k = degree - idx  # runs degree..1
+            bk = coeffs[k].astype(v.dtype) * v + 2.0 * t_op(idx, b1) - b2
+            return bk, b1
+        b1, b2 = jax.lax.fori_loop(
+            0, degree, body, (jnp.zeros_like(v), jnp.zeros_like(v)))
+        return coeffs[0].astype(v.dtype) * v + t_op(
+            jnp.asarray(degree, jnp.int32), b1) - b2
+
+    def scalar_fn(lam):
+        lam = jnp.asarray(lam)
+        t = alpha * lam + beta
+        b1 = jnp.zeros_like(lam)
+        b2 = jnp.zeros_like(lam)
+        for k in range(degree, 0, -1):
+            b1, b2 = coeffs[k] + 2.0 * t * b1 - b2, b1
+        return coeffs[0] + t * b1 - b2
+
+    if lambda_star is None:
+        lambda_star = float(np.max(f)) * 1.01 + 1e-6
+    return SpectralSeries(
+        name=f"{name}_d{degree}", degree=degree,
+        apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=lambda_star,
+    )
+
+
+def cheb_neg_exp(degree: int, rho: float, tau: float = 1.0) -> SpectralSeries:
+    """Chebyshev fit of -e^{-tau x} on [0, rho]."""
+    return chebyshev(
+        lambda x: -np.exp(-tau * x), degree, 0.0, rho,
+        name=f"cheb_neg_exp_t{tau:g}", lambda_star=0.0)
+
+
+def cheb_log(degree: int, rho: float, eps: float = 1e-2) -> SpectralSeries:
+    """Chebyshev fit of log(x + eps) on [0, rho] — the stable series form
+    of the paper's best EXACT transform, which its Taylor series could not
+    reach (Sec. 5.3)."""
+    return chebyshev(
+        lambda x: np.log(x + eps), degree, 0.0, rho,
+        name=f"cheb_log_eps{eps:g}",
+        lambda_star=float(np.log(rho + eps)) * 1.01 + 1e-3)
+
+
+TABLE2_SERIES = {
+    "taylor_log": taylor_log,
+    "taylor_neg_exp": taylor_neg_exp,
+    "limit_neg_exp": limit_neg_exp,
+}

@@ -1,0 +1,155 @@
+"""Iterative/stochastic top-k SVD solvers (paper Sec. 5.1).
+
+Two representative solvers from the paper:
+  * Oja's algorithm (Shamir 2015): gradient ascent on the trace objective
+    with QR retraction.
+  * mu-EigenGame / "EigenGame Unloaded" (Gemp et al. 2021b): per-vector
+    utility ascent with Riemannian projection; penalties use v_j (not
+    A v_j), which is what makes unbiased minibatch estimates possible.
+
+Both consume an OPERATOR ``matvec: (n,k) -> (n,k)`` computing A @ V where
+A is the (reversed, transformed) Laplacian — exact, series-approximated,
+or stochastic.  The solver itself is agnostic; that separation is the
+paper's architecture: transformation and estimation happen inside the
+operator, convergence happens here.
+
+Solvers find the TOP-k of A; the Eq. (8) reversal makes those the
+bottom-k of L.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+MatVec = Callable[[jax.Array], jax.Array]
+# stochastic operators additionally take a PRNG key
+StochMatVec = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+class SolverState(NamedTuple):
+    v: jax.Array  # (n, k) current estimate, orthonormal columns
+    step: jax.Array  # scalar int32
+
+
+def init_state(key: jax.Array, n: int, k: int, dtype=jnp.float32) -> SolverState:
+    v0 = jax.random.normal(key, (n, k), dtype=dtype)
+    q, _ = jnp.linalg.qr(v0)
+    return SolverState(v=q, step=jnp.zeros((), jnp.int32))
+
+
+def oja_step(state: SolverState, av: jax.Array, lr: float) -> SolverState:
+    """V <- QR(V + lr * A V).  One Oja update with QR retraction."""
+    v = state.v + lr * av
+    q, r = jnp.linalg.qr(v)
+    # fix QR sign ambiguity for determinism (diag(R) >= 0)
+    sign = jnp.sign(jnp.diagonal(r))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    return SolverState(v=q * sign[None, :], step=state.step + 1)
+
+
+def mu_eg_step(state: SolverState, av: jax.Array, lr: float) -> SolverState:
+    """One mu-EigenGame (unloaded) update.
+
+    grad_i = A v_i - sum_{j<i} <v_i, A v_j> v_j        (utility gradient)
+    r_i    = grad_i - <v_i, grad_i> v_i                (sphere projection)
+    v_i   <- normalize(v_i + lr * r_i)
+    """
+    v = state.v
+    vav = v.T @ av  # (k, k): [i, j] = <v_i, A v_j>
+    # strictly-lower mask: penalties from parents j < i
+    k = v.shape[1]
+    lower = jnp.tril(jnp.ones((k, k), v.dtype), k=-1)
+    # penalty_i = sum_{j<i} vav[i, j] * v_j  -> columns: V @ (lower * vav)^T
+    penalties = v @ (lower * vav).T
+    grad = av - penalties
+    grad = grad - v * jnp.sum(v * grad, axis=0, keepdims=True)  # Riemannian
+    vn = v + lr * grad
+    vn = vn / jnp.maximum(jnp.linalg.norm(vn, axis=0, keepdims=True), 1e-30)
+    return SolverState(v=vn, step=state.step + 1)
+
+
+STEP_FNS = {"oja": oja_step, "mu_eg": mu_eg_step}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    method: str = "mu_eg"  # "oja" | "mu_eg"
+    lr: float = 1e-3
+    steps: int = 1000
+    eval_every: int = 10
+    k: int = 8
+    seed: int = 0
+
+
+class Trace(NamedTuple):
+    """Metrics recorded every eval_every steps."""
+    steps: jax.Array  # (T,)
+    subspace_error: jax.Array  # (T,)
+    streak: jax.Array  # (T,)
+
+
+def run_solver(
+    operator: MatVec | StochMatVec,
+    n: int,
+    cfg: SolverConfig,
+    v_star: jax.Array | None = None,
+    stochastic: bool = False,
+) -> tuple[SolverState, Trace]:
+    """Run a solver, recording metrics against ground truth v_star.
+
+    The whole run is one jitted scan over eval chunks, so Python overhead
+    is O(1) in the number of steps.
+    """
+    step_fn = STEP_FNS[cfg.method]
+    key = jax.random.PRNGKey(cfg.seed)
+    key, init_key = jax.random.split(key)
+    state0 = init_state(init_key, n, cfg.k)
+    num_evals = max(1, cfg.steps // cfg.eval_every)
+    if v_star is None:
+        v_star = jnp.zeros((n, cfg.k))
+
+    def one_step(carry, key_step):
+        state = carry
+        if stochastic:
+            av = operator(key_step, state.v)
+        else:
+            av = operator(state.v)
+        return step_fn(state, av, cfg.lr), None
+
+    def eval_chunk(state, chunk_keys):
+        state, _ = jax.lax.scan(one_step, state, chunk_keys)
+        m = (
+            state.step,
+            metrics.subspace_error(state.v, v_star),
+            metrics.eigenvector_streak(state.v, v_star),
+        )
+        return state, m
+
+    keys = jax.random.split(key, num_evals * cfg.eval_every).reshape(
+        num_evals, cfg.eval_every, -1)
+
+    run = jax.jit(lambda s, ks: jax.lax.scan(eval_chunk, s, ks))
+    final, (steps, err, streak) = run(state0, keys)
+    return final, Trace(steps=steps, subspace_error=err, streak=streak)
+
+
+def steps_to_tolerance(trace: Trace, tol: float) -> int:
+    """First recorded step at which subspace error <= tol (or -1)."""
+    import numpy as np
+    err = np.asarray(trace.subspace_error)
+    idx = np.nonzero(err <= tol)[0]
+    return int(np.asarray(trace.steps)[idx[0]]) if len(idx) else -1
+
+
+def steps_to_streak(trace: Trace, k: int) -> int:
+    """First recorded step with a full-k eigenvector streak (or -1)."""
+    import numpy as np
+    st = np.asarray(trace.streak)
+    idx = np.nonzero(st >= k)[0]
+    return int(np.asarray(trace.steps)[idx[0]]) if len(idx) else -1

@@ -1,0 +1,198 @@
+"""Stochastic parallel estimation of Laplacian powers via random walks on
+the edge incidence graph (paper Sec. 4.3, Eqs. 12-14).
+
+Identity (Eq. 12):   L^l = sum_{chains c in E^l} alpha_c x_{e_1} x_{e_l}^T
+where alpha_c = prod_j x_{e_j}^T x_{e_{j+1}} is nonzero exactly when
+consecutive edges are incident, i.e. when (e_1..e_l) is a walk on the
+edge incidence graph (self loops included; Table 1 gives the factor
+values in {2, +-1}).
+
+Sampling: a walk is drawn by picking a uniform edge then stepping to a
+uniform incident edge l-1 times; its probability is
+p_l = (1/|E|) prod_{i<l} 1/deg(e_i)  (Eq. 13 — the final edge needs no
+step probability).  Two unbiased estimators are provided:
+
+  * ``rejection`` (paper-faithful): accept with prob p_min / p_l,
+    p_min = (2 deg* - 1)^{-(l-1)} / |E| (Eq. 14); every chain then occurs
+    w.p. exactly p_min, and
+        L^l  =  E[ 1{acc} alpha_c x_{e_1} x_{e_l}^T ] / p_min.
+  * ``importance`` (beyond-paper; the paper's stated future work of
+    "improving upon the simple rejection sampling scheme"): weight each
+    drawn walk by alpha_c / p_l(c) — a Horvitz-Thompson estimator with
+    acceptance probability 1.  Strictly lower variance (Rao-Blackwell of
+    the accept coin) and no wasted walkers.
+
+TPU adaptation: walks are shape-static (lax.scan over l steps, vmap over
+walkers, shard_map over devices); rejection becomes masking so the SPMD
+program never data-depends on acceptance.  A single batch of length-l
+walks yields unbiased estimates of ALL powers i <= l simultaneously
+(linearity of expectation, paper Sec. 4.3): prefix products alpha_{1:i}
+with endpoints (e_1, e_i) estimate L^i.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.laplacian import EdgeIncidence, EdgeList
+
+
+class WalkBatch(NamedTuple):
+    """Batch of length-l walks with per-prefix statistics.
+
+    For walker w and prefix length i (1-indexed power L^i uses prefix of
+    i edges => i-1 steps):
+      first_edge[w]      — e_1
+      edge_at[w, i]      — e_{i+1} after i steps (so edge_at[w, 0] = e_1)
+      alpha[w, i]        — prod of the first i incidence inner products
+                           (alpha[w, 0] = 1)
+      logp[w, i]         — log p of the length-(i+1) prefix walk (Eq. 13)
+    """
+
+    first_edge: jax.Array  # (W,) int32
+    edge_at: jax.Array  # (W, l) int32
+    alpha: jax.Array  # (W, l) float32
+    logp: jax.Array  # (W, l) float32
+
+
+def sample_walks(key: jax.Array, inc: EdgeIncidence, num_walkers: int,
+                 length: int) -> WalkBatch:
+    """Draw `num_walkers` independent length-`length` walks (vmapped)."""
+    e = inc.nbrs.shape[0]
+
+    def one_walk(k):
+        k0, k1 = jax.random.split(k)
+        e0 = jax.random.randint(k0, (), 0, e)
+        logp0 = -jnp.log(float(e))
+
+        def step(carry, kk):
+            cur, alpha, logp = carry
+            d = inc.deg[cur]
+            slot = jax.random.randint(kk, (), 0, d)
+            nxt = inc.nbrs[cur, slot]
+            alpha = alpha * inc.ip[cur, slot]
+            logp = logp - jnp.log(d.astype(jnp.float32))
+            return (nxt, alpha, logp), (nxt, alpha, logp)
+
+        ks = jax.random.split(k1, length - 1)
+        _, (edges, alphas, logps) = jax.lax.scan(
+            step, (e0, jnp.float32(1.0), logp0), ks)
+        edge_at = jnp.concatenate([e0[None], edges])
+        alpha = jnp.concatenate([jnp.ones((1,), jnp.float32), alphas])
+        logp = jnp.concatenate([jnp.full((1,), logp0), logps])
+        return WalkBatch(first_edge=e0, edge_at=edge_at, alpha=alpha, logp=logp)
+
+    keys = jax.random.split(key, num_walkers)
+    return jax.vmap(one_walk)(keys)
+
+
+def _accumulate_rank1(out, g: EdgeList, e_first, e_last, coeff, v):
+    """out += sum_w coeff[w] * x_{e_first[w]} (x_{e_last[w]}^T v).
+
+    x_e has two nonzeros (+1 at src, -1 at dst) so each term is a 2-row
+    scatter of the 2-row gather (x_last^T v) — O(W k), never n x n.
+    """
+    xv = v[g.src[e_last]] - v[g.dst[e_last]]  # (W, k) = x_{e_l}^T v rows
+    contrib = coeff[:, None] * xv  # (W, k)
+    out = out.at[g.src[e_first]].add(contrib)
+    out = out.at[g.dst[e_first]].add(-contrib)
+    return out
+
+
+def estimate_power_matvec(
+    walks: WalkBatch, g: EdgeList, inc: EdgeIncidence, power: int,
+    v: jax.Array, mode: str = "importance", key: jax.Array | None = None,
+) -> jax.Array:
+    """Unbiased estimate of L^power @ v from a walk batch (power >= 1).
+
+    Uses the length-(power) prefixes of the walks.  `mode`:
+      'importance' — HT weights alpha/p (no rejection; lower variance)
+      'rejection'  — paper's Eq. 14 accept-coin, implemented as masking
+    """
+    i = power - 1  # prefix index: i steps
+    w = walks.first_edge.shape[0]
+    e_last = walks.edge_at[:, i]
+    alpha = walks.alpha[:, i]
+    logp = walks.logp[:, i]
+    if mode == "importance":
+        coeff = alpha * jnp.exp(-logp) / w
+    elif mode == "rejection":
+        if key is None:
+            raise ValueError("rejection mode needs a key for the accept coin")
+        log_pmin = -power * jnp.log(jnp.float32(inc.deg_star_inc)) \
+            - jnp.log(jnp.float32(g.num_edges))
+        # accept w.p. p_min / p_l  (<= 1 by construction of deg*_inc)
+        p_acc = jnp.exp(jnp.minimum(log_pmin - logp, 0.0))
+        accept = jax.random.uniform(key, (w,)) < p_acc
+        coeff = jnp.where(accept, alpha, 0.0) * jnp.exp(-log_pmin) / w
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    out = jnp.zeros_like(v)
+    return _accumulate_rank1(out, g, walks.first_edge, e_last, coeff, v)
+
+
+def walk_polynomial_operator(
+    g: EdgeList,
+    inc: EdgeIncidence,
+    coeffs: tuple[float, ...],
+    lambda_star: float,
+    num_walkers: int,
+    mode: str = "importance",
+):
+    """op(key, V) -> (lambda* I - P(L)) V with P(L) = sum_i coeffs[i] L^i
+    estimated from ONE shared batch of length-(deg) walks — the paper's
+    'single walk estimates all shorter powers' trick (Sec. 4.3).
+
+    Intended for low-degree polynomials where walk variance is
+    manageable; high-degree series should use the minibatch operator.
+    """
+    deg = len(coeffs) - 1
+    if deg < 1:
+        raise ValueError("need degree >= 1")
+
+    def op(key: jax.Array, v: jax.Array) -> jax.Array:
+        kw, kc = jax.random.split(key)
+        walks = sample_walks(kw, inc, num_walkers, max(deg, 2))
+        acc = coeffs[0] * v
+        for p in range(1, deg + 1):
+            est = estimate_power_matvec(
+                walks, g, inc, p, v, mode=mode,
+                key=jax.random.fold_in(kc, p) if mode == "rejection" else None)
+            acc = acc + coeffs[p] * est
+        return lambda_star * v - acc
+
+    return op
+
+
+# ---------------------------------------------------------------------------
+# Dense-estimate helpers (for tests: estimate L^l itself, not L^l v).
+# ---------------------------------------------------------------------------
+
+def estimate_power_dense(
+    walks: WalkBatch, g: EdgeList, inc: EdgeIncidence, power: int,
+    n: int, mode: str = "importance", key: jax.Array | None = None,
+) -> jax.Array:
+    """Materialize the L^power estimate as an (n, n) matrix (test-sized
+    graphs only) by applying the estimator to I."""
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return estimate_power_matvec(walks, g, inc, power, eye, mode=mode, key=key)
+
+
+def lowdeg_negexp_coeffs(degree: int, rho: float, tau: float = 1.0
+                         ) -> tuple[float, ...]:
+    """Power-basis coefficients of a degree-`degree` Chebyshev fit of
+    -e^{-tau x} on [0, rho].  Low degree only (<= ~10): the power basis is
+    exact what the walk estimator needs (one coefficient per L^i), and at
+    such degrees the basis conversion is numerically safe in float64.
+    """
+    import numpy as np
+    j = np.arange(degree + 1)
+    t = np.cos(np.pi * (j + 0.5) / (degree + 1))
+    x = 0.5 * rho * (t + 1.0)
+    f = -np.exp(-tau * x)
+    v = np.vander(x, degree + 1, increasing=True)
+    coeffs, *_ = np.linalg.lstsq(v, f, rcond=None)
+    return tuple(float(c) for c in coeffs)

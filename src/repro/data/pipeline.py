@@ -1,0 +1,71 @@
+"""Data pipelines.
+
+Two streams feed the framework:
+
+  * TOKEN stream for the LM pool — synthetic but DETERMINISTIC: batch at
+    step t is a pure function of (seed, t), so resume-after-failure is a
+    seek, not a replay, and every data-parallel shard slices its own rows
+    (no host broadcast).  A real deployment swaps `token_batch` for a
+    tokenized corpus reader with the same (seed, step) -> batch contract.
+
+  * EDGE stream for SPED — uniform minibatches of incidence rows
+    (paper Sec. 3's stochastic optimization model), same contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.laplacian import EdgeList
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        """Full global batch for `step` (dry-run / single host)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        toks = jax.random.randint(
+            key, (self.global_batch, self.seq_len), 0, self.vocab_size,
+            dtype=jnp.int32)
+        labels = jnp.roll(toks, -1, axis=1)
+        return {"tokens": toks, "labels": labels}
+
+    def shard_batch_at(self, step: int, shard: int, num_shards: int):
+        """Only this host's rows — identical values to slicing batch_at,
+        without materializing the global batch (multi-host pattern)."""
+        assert self.global_batch % num_shards == 0
+        rows = self.global_batch // num_shards
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        # fold the shard id so each host draws only its slice, while the
+        # (seed, step, shard) triple remains the deterministic address
+        skey = jax.random.fold_in(key, shard)
+        toks = jax.random.randint(
+            skey, (rows, self.seq_len), 0, self.vocab_size, dtype=jnp.int32)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePipeline:
+    """Uniform-with-replacement edge minibatches from a fixed graph."""
+    graph: EdgeList
+    batch_edges: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        sel = jax.random.randint(key, (self.batch_edges,), 0,
+                                 self.graph.num_edges)
+        return {
+            "src": self.graph.src[sel],
+            "dst": self.graph.dst[sel],
+            "weight": self.graph.weight[sel],
+            "num_edges_total": self.graph.num_edges,
+        }

@@ -1,0 +1,2 @@
+"""edge_spmm Pallas kernel package."""
+from repro.kernels.edge_spmm import ops, ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: minibatch incidence SpMM  Y = X_b^T W_b (X_b V).
+
+The stochastic heart of SPED (paper Sec. 3/4.3): a minibatch of B edges
+defines incidence rows x_e (+1 at src, -1 at dst); the unbiased Laplacian
+estimate applied to the panel V is
+
+    Y = sum_e w_e x_e (x_e^T V)  =  X_b^T diag(w) X_b V.
+
+GPU implementations scatter-add per edge.  TPUs have no efficient
+scatter, so the TPU-native adaptation (DESIGN.md Sec. 3) materializes the
+one-hot incidence BLOCK in VMEM and rides the MXU twice:
+
+    X_blk = onehot(src) - onehot(dst)          (BE, n)   built via iota
+    D     = X_blk @ V                           (BE, k)   MXU
+    Y    += X_blk^T @ (w * D)                   (n, k)    MXU
+
+Grid over edge blocks; Y accumulates in the output ref.  V is assumed to
+fit VMEM (n x k panels with n <= ~8k, k <= 128 — the spectral-clustering
+regime; larger n uses the node-blocked variant in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _edge_spmm_kernel(src_ref, dst_ref, w_ref, v_ref, out_ref):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    n = v_ref.shape[0]
+    be = src_ref.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (be, n), 1)
+    oh_src = (src_ref[...][:, None] == cols).astype(jnp.float32)
+    oh_dst = (dst_ref[...][:, None] == cols).astype(jnp.float32)
+    x_blk = oh_src - oh_dst  # (BE, n) incidence rows
+    d = jnp.dot(x_blk, v_ref[...], preferred_element_type=jnp.float32)
+    wd = w_ref[...][:, None] * d
+    out_ref[...] += jnp.dot(x_blk.T, wd, preferred_element_type=jnp.float32)
+
+
+def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
+              *, block_e: int = 128, interpret: bool = False) -> jax.Array:
+    """Y = sum_e w_e x_e x_e^T V over the edge minibatch.  E % block_e == 0
+    (ops.py pads with zero-weight edges)."""
+    e = src.shape[0]
+    n, k = v.shape
+    assert e % block_e == 0, (e, block_e)
+    grid = (e // block_e,)
+    return pl.pallas_call(
+        _edge_spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(src, dst, w, v)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for edge_spmm: pads edges to block multiples (zero weight
+=> no contribution) and lane-aligns the panel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_spmm import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
+              *, block_e: int = 128, interpret: bool = False) -> jax.Array:
+    e = src.shape[0]
+    n, k = v.shape
+    pad_e = (-e) % block_e
+    if pad_e:
+        src = jnp.concatenate([src, jnp.zeros((pad_e,), src.dtype)])
+        dst = jnp.concatenate([dst, jnp.ones((pad_e,), dst.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad_e,), w.dtype)])
+    pad_k = (-k) % 128
+    pad_n = (-n) % 8  # sublane alignment
+    vp = jnp.pad(v.astype(jnp.float32), ((0, pad_n), (0, pad_k)))
+    out = kernel.edge_spmm(src, dst, w.astype(jnp.float32), vp,
+                           block_e=block_e, interpret=interpret)
+    return out[:n, :k]

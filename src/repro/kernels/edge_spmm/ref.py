@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for edge_spmm."""
+import jax
+import jax.numpy as jnp
+
+
+def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array,
+              v: jax.Array) -> jax.Array:
+    """Y = sum_e w_e x_e (x_e^T V) via scatter-add (the GPU-style form)."""
+    diff = v[src] - v[dst]
+    wd = w[:, None] * diff
+    out = jnp.zeros_like(v)
+    out = out.at[src].add(wd)
+    out = out.at[dst].add(-wd)
+    return out

@@ -1,0 +1,2 @@
+"""eg_update Pallas kernel package."""
+from repro.kernels.eg_update import ops, ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd fused mu-EigenGame update: two Pallas passes over the panels plus
+O(k^3) coefficient algebra on tiny matrices."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.eg_update import kernel, ref
+
+
+def _pad_rows(x: jax.Array, m: int) -> jax.Array:
+    pad = (-x.shape[0]) % m
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def mu_eg_update(v: jax.Array, av: jax.Array, lr: float,
+                 *, block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """Fused mu-EG step == ref.mu_eg_update (oracle), 2 panel passes."""
+    n, k = v.shape
+    pad_k = (-k) % 128
+    vp = _pad_rows(jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_k))), block_n)
+    avp = _pad_rows(jnp.pad(av.astype(jnp.float32), ((0, 0), (0, pad_k))), block_n)
+    kk = k + pad_k
+    s2 = kernel.gram2k(vp, avp, block_n=block_n, interpret=interpret)
+    # un-pad the gram back to 2k x 2k ordering [V | AV]
+    s2 = jnp.concatenate([
+        jnp.concatenate([s2[:k, :k], s2[:k, kk: kk + k]], axis=1),
+        jnp.concatenate([s2[kk: kk + k, :k], s2[kk: kk + k, kk: kk + k]], axis=1),
+    ], axis=0)
+    m1, m2, colscale = ref.coefficient_matrices(s2, k, lr)
+    m1p = jnp.pad(m1, ((0, pad_k), (0, pad_k)))
+    m2p = jnp.pad(m2, ((0, pad_k), (0, pad_k)))
+    csp = jnp.pad(colscale, (0, pad_k))
+    out = kernel.panel_mix(vp, avp, m1p, m2p, csp, block_n=block_n,
+                           interpret=interpret)
+    return out[:n, :k]

@@ -1,0 +1,2 @@
+"""laplacian_poly Pallas kernel package."""
+from repro.kernels.laplacian_poly import ops, ref  # noqa: F401

@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the laplacian_poly Pallas kernels.
+
+Handles padding to MXU-aligned block multiples and exposes the full
+limit-series application -(I - sL/l)^l V as a lax.fori_loop over the
+fused kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.laplacian_poly import kernel
+
+
+def _pad_to(x: jax.Array, m: int, axes) -> jax.Array:
+    pads = [(0, 0)] * x.ndim
+    for ax in axes:
+        pads[ax] = (0, (-x.shape[ax]) % m)
+    return jnp.pad(x, pads) if any(p != (0, 0) for p in pads) else x
+
+
+def _pick_block(n: int) -> int:
+    for b in (256, 128):
+        if n % b == 0 or n > b:
+            return b
+    return 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def poly_step(l_mat: jax.Array, u: jax.Array, c, *, block: int = 0,
+              interpret: bool = False) -> jax.Array:
+    """out = U - c (L @ U), any n (padded internally to block multiples)."""
+    n, k = u.shape
+    b = block or _pick_block(n)
+    lp = _pad_to(l_mat.astype(jnp.float32), b, (0, 1))
+    up = _pad_to(u.astype(jnp.float32), b, (0,))
+    kp = _pad_to(up, 128, (1,))  # lane-align the panel
+    out = kernel.poly_step(lp, kp, c, block_m=b, block_k=b,
+                           interpret=interpret)
+    return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("degree", "interpret", "block"))
+def limit_series_apply(l_mat: jax.Array, v: jax.Array, *, degree: int,
+                       scale: float = 1.0, block: int = 0,
+                       interpret: bool = False) -> jax.Array:
+    """-(I - scale L / degree)^degree @ V with one fused kernel per step.
+
+    The padded L and panel stay in HBM-contiguous layout across the loop;
+    each step is a single pallas_call (matmul + AXPY epilogue).
+    """
+    n, k = v.shape
+    b = block or _pick_block(n)
+    lp = _pad_to(l_mat.astype(jnp.float32), b, (0, 1))
+    vp = _pad_to(_pad_to(v.astype(jnp.float32), b, (0,)), 128, (1,))
+    c = scale / degree
+
+    def body(_, u):
+        return kernel.poly_step(lp, u, c, block_m=b, block_k=b,
+                                interpret=interpret)
+
+    u = jax.lax.fori_loop(0, degree, body, vp)
+    return -u[:n, :k]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the laplacian_poly kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def poly_step(l_mat: jax.Array, u: jax.Array, c) -> jax.Array:
+    return u - jnp.asarray(c, u.dtype) * (l_mat @ u)
+
+
+def dense_matvec_panel(l_mat: jax.Array, u: jax.Array) -> jax.Array:
+    return l_mat @ u
+
+
+def limit_series_apply(l_mat: jax.Array, v: jax.Array, degree: int,
+                       scale: float = 1.0) -> jax.Array:
+    """-(I - scale L/deg)^deg @ v via the recurrence (oracle for ops)."""
+    c = scale / degree
+    u = v
+    for _ in range(degree):
+        u = poly_step(l_mat, u, c)
+    return -u

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why the docstring sits below them
+# and no __future__ import is used in this file.
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the REAL program (train_step with optimizer
+update, or serve prefill/decode step), jits it with the production
+shardings, runs .lower().compile() on 512 placeholder host devices, and
+records:
+  * memory_analysis()  — proves the cell fits per-device HBM
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective bytes   — parsed from the post-SPMD HLO text per op kind
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k --mesh both --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch import shardings as shr
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models.frontends import frontend_spec
+from repro.train import optimizer as opt_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape_name: str):
+    """Returns (batch_tree, kind) of ShapeDtypeStructs — no allocation."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind in ("train", "prefill"):
+        batch = {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+        }
+        for name, (fshape, fdtype) in frontend_spec(cfg, b).items():
+            batch[name] = SDS(fshape, fdtype)
+        if kind == "prefill":
+            batch.pop("labels")
+        return batch, kind
+    # decode: one new token against a cache filled to s
+    batch = {"tokens": SDS((b, 1), jnp.int32)}
+    return batch, kind
+
+
+def cache_shapes(cfg, batch: int, max_seq: int):
+    """ShapeDtypeStructs of the ServeState via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch, max_seq))
+
+
+# --------------------------------------------------------------------------
+# Programs
+# --------------------------------------------------------------------------
+
+def build_train_step(cfg, opt_cfg: opt_lib.OptConfig,
+                     microbatches: int = 1):
+    """Train step with optional gradient accumulation: the global batch is
+    split into `microbatches` sequential slices, shrinking the live
+    activation checkpoints by the same factor (the fit-lever for >100B
+    training on small pods); grads accumulate in param sharding and the
+    optimizer applies once."""
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model_lib.train_loss(p, cfg, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def one(acc, bslice):
+                (loss, metrics), g = grads_of(params, bslice)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metrics_s) = jax.lax.scan(one, zeros, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metrics_s)
+        params, opt_state, opt_metrics = opt_lib.apply(
+            opt_cfg, opt_state, params, grads)
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step
+
+
+def build_decode_step(cfg):
+    def serve_step(params, state, tokens):
+        return model_lib.decode_step(params, cfg, state, tokens)
+
+    return serve_step
+
+
+def build_prefill(cfg, max_seq: int):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch, max_seq=max_seq)
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+from repro.launch.hlo_analysis import (  # noqa: F401
+    collective_bytes, cpu_dot_upcast_bytes, _loop_multipliers,
+    _shape_bytes, _split_computations, _COLL_RE)
+
+# --------------------------------------------------------------------------
+# One cell
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_overrides: dict | None = None, save_hlo: str | None = None,
+             remat: str | None = None, microbatches: int = 1):
+    cfg = get_arch(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    if not shape_applicable(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped",
+                "reason": "full-attention arch at 524k context "
+                          "(DESIGN.md Sec. 4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    batch_sds, kind = input_specs(cfg, shape_name)
+    sh = SHAPES[shape_name]
+
+    with jax.set_mesh(mesh):
+        params_sds = jax.eval_shape(
+            functools.partial(model_lib.init, cfg=cfg), jax.random.PRNGKey(0))
+        if kind != "train":
+            # SERVING: bf16 weights, TP-only sharding (no FSDP).  FSDP
+            # param all-gathers per decoded token were the dominant
+            # collective (8.7 GB/step on qwen1.5-32b); resident bf16
+            # weights kill them and fit HBM (see EXPERIMENTS.md #Perf).
+            params_sds = jax.tree.map(
+                lambda l: SDS(l.shape, jnp.bfloat16)
+                if jnp.issubdtype(l.dtype, jnp.floating) else l, params_sds)
+            p_specs = shr.param_specs(cfg, params_sds, mesh, fsdp=False)
+        else:
+            p_specs = shr.param_specs(cfg, params_sds, mesh)
+        p_shardings = shr.to_named(mesh, p_specs)
+        b_shardings = shr.to_named(mesh, shr.batch_specs(mesh, batch_sds))
+
+        if kind == "train":
+            opt_cfg = opt_lib.OptConfig(**(opt_overrides or {}))
+            opt_sds = jax.eval_shape(
+                functools.partial(opt_lib.init, opt_cfg), params_sds)
+            m_specs = shr.moment_specs(p_specs, params_sds, mesh)
+            o_specs = opt_lib.OptState(
+                step=jax.sharding.PartitionSpec(),
+                mu=m_specs, nu=m_specs,
+                error=(None if opt_sds.error is None else p_specs))
+            o_shardings = shr.to_named(mesh, o_specs)
+            fn = jax.jit(
+                build_train_step(cfg, opt_cfg, microbatches=microbatches),
+                in_shardings=(p_shardings, o_shardings, b_shardings),
+                donate_argnums=(0, 1))
+            lowered = fn.lower(params_sds, opt_sds, batch_sds)
+        elif kind == "prefill":
+            fn = jax.jit(
+                build_prefill(cfg, max_seq=sh["seq_len"]),
+                in_shardings=(p_shardings, b_shardings))
+            lowered = fn.lower(params_sds, batch_sds)
+        else:  # decode
+            caches_sds = cache_shapes(cfg, sh["global_batch"], sh["seq_len"])
+            c_shardings = shr.to_named(
+                mesh, shr.cache_specs(cfg, mesh, caches_sds))
+            fn = jax.jit(
+                build_decode_step(cfg),
+                in_shardings=(p_shardings, c_shardings,
+                              b_shardings["tokens"]),
+                donate_argnums=(1,))
+            lowered = fn.lower(params_sds, caches_sds, batch_sds["tokens"])
+
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # some backends lack the query
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    upcast = cpu_dot_upcast_bytes(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "status": "ok",
+        "kind": kind,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "seconds": round(time.time() - t0, 1),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "memory": {**mem_d, "cpu_dot_upcast_bytes": upcast},
+        "collectives": coll,
+        "remat": cfg.remat_policy,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--remat", default=None, choices=["full", "dots", "none"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--moment-dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+        out_path = os.path.join(args.out, tag + ".json")
+        try:
+            res = run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                           remat=args.remat, microbatches=args.microbatch,
+                           opt_overrides={"moment_dtype": args.moment_dtype}
+                           if args.moment_dtype != "float32" else None)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "multipod" if mp else "pod",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops={res['flops']:.3g}"
+                     f" coll={res['collectives']['total_bytes']:.3g}B"
+                     f" args={res['memory'].get('argument_bytes')}"
+                     f" t={res['seconds']}s")
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    if failures:
+        print(f"[dryrun] {failures} FAILURES", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

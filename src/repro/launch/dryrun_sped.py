@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# device-count override must precede every other import (see dryrun.py).
+_DOC = """Dry-run for the PAPER'S OWN workload at production scale: one
+distributed SPED solver step (series-transformed Laplacian operator +
+mu-EigenGame update) on a synthetic web-scale graph, lowered and compiled
+for the 16x16 pod and the 2x16x16 multi-pod mesh.
+
+Graph stand-in: n = 2^22 nodes, E = 2^26 edges (ShapeDtypeStruct only —
+never materialized).  Edges are sharded over ("pod","data") x "model"
+(every chip owns an edge shard); the eigenvector panel V (n, k) is
+replicated.  Each Laplacian matvec = local edge gather/segment-sum + one
+all-reduce of the panel, so a degree-d series costs d panel all-reduces —
+the collective-dominant regime the perf loop then attacks:
+
+  variants (the #Perf iteration ladder):
+    limit251        — paper-faithful: -(I - L/251)^251, f32 panel
+                      (2 scatter-adds per matvec -> 2 f32 ARs each)
+    cheb64          — beyond-paper 1: Chebyshev(64) of -e^{-tau x} (same
+                      spectral accuracy at ~4x fewer matvecs/psums)
+    cheb64_fused    — beyond-paper 2: + single fused scatter per matvec
+                      (concat src/dst indices) -> 1 AR per matvec
+    cheb64_bf16     — beyond-paper 3: + shard_map matvec with an EXPLICIT
+                      bf16 psum (XLA upcasts scatter-add all-reduces to
+                      f32 otherwise) -> halves the payload again
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun_sped --variant cheb64 \
+      --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch import dryrun as dr
+from repro.core import series as series_lib
+from repro.core import solvers
+
+SDS = jax.ShapeDtypeStruct
+
+N_NODES = 1 << 22
+N_EDGES = 1 << 26
+K = 32
+RHO_UB = 64.0  # spectral-radius bound fed to the scaled/cheb variants
+
+
+def edge_specs():
+    return {
+        "src": SDS((N_EDGES,), jnp.int32),
+        "dst": SDS((N_EDGES,), jnp.int32),
+        "weight": SDS((N_EDGES,), jnp.float32),
+    }
+
+
+def make_series(variant: str):
+    if variant == "limit251":
+        return series_lib.limit_neg_exp(251, scale=8.0 / RHO_UB)
+    if variant.startswith("cheb64"):
+        return series_lib.cheb_neg_exp(64, rho=RHO_UB, tau=8.0 / RHO_UB)
+    raise ValueError(variant)
+
+
+def build_step(variant: str, mesh, edge_axes, lr: float = 0.1):
+    s = make_series(variant)
+    panel_dtype = jnp.bfloat16 if variant.endswith("bf16") else jnp.float32
+
+    def matvec_2scatter(edges, u):
+        # baseline: two scatter-adds -> GSPMD emits 2 f32 all-reduces
+        w = edges["weight"].astype(u.dtype)
+        diff = u[edges["src"]] - u[edges["dst"]]
+        wdiff = w[:, None] * diff
+        out = jnp.zeros_like(u)
+        out = out.at[edges["src"]].add(wdiff)
+        out = out.at[edges["dst"]].add(-wdiff)
+        return out
+
+    def matvec_fused(edges, u):
+        # one concatenated scatter -> 1 all-reduce per matvec
+        w = edges["weight"].astype(u.dtype)
+        diff = u[edges["src"]] - u[edges["dst"]]
+        wdiff = w[:, None] * diff
+        idx = jnp.concatenate([edges["src"], edges["dst"]])
+        upd = jnp.concatenate([wdiff, -wdiff])
+        return jnp.zeros_like(u).at[idx].add(upd)
+
+    if variant.endswith("bf16"):
+        import functools as ft
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        @ft.partial(shard_map, mesh=mesh,
+                    in_specs=(P(edge_axes), P(edge_axes), P(edge_axes), P()),
+                    out_specs=P())
+        def mv_sm(src, dst, w, u):
+            diff = u[src] - u[dst]
+            wdiff = w.astype(u.dtype)[:, None] * diff
+            idx = jnp.concatenate([src, dst])
+            upd = jnp.concatenate([wdiff, -wdiff])
+            out = jnp.zeros_like(u).at[idx].add(upd)
+            return jax.lax.psum(out, edge_axes)  # EXPLICIT bf16 psum
+
+        def matvec(edges, u):
+            return mv_sm(edges["src"], edges["dst"], edges["weight"], u)
+    elif variant.endswith("fused"):
+        matvec = matvec_fused
+    else:
+        matvec = matvec_2scatter
+
+    def step(v, edges):
+        av = s.apply_reversed(
+            lambda u: matvec(edges, u), v.astype(panel_dtype))
+        state = solvers.SolverState(v=v, step=jnp.zeros((), jnp.int32))
+        return solvers.mu_eg_step(state, av.astype(jnp.float32), lr).v
+
+    return step
+
+
+def run_cell(variant: str, multi_pod: bool):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    edge_axes = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+    with jax.set_mesh(mesh):
+        v_sds = SDS((N_NODES, K), jnp.float32)
+        e_sh = {k: NamedSharding(mesh, P(edge_axes))
+                for k in ("src", "dst", "weight")}
+        fn = jax.jit(build_step(variant, mesh, edge_axes),
+                     in_shardings=(NamedSharding(mesh, P()), e_sh),
+                     donate_argnums=(0,))
+        lowered = fn.lower(v_sds, edge_specs())
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = dr.collective_bytes(hlo)
+    s = make_series(variant)
+    devices = int(np.prod(list(mesh.shape.values())))
+    # analytic terms: degree matvecs of O(E/devices * K) gather/scatter +
+    # K*N panel ops; compute is the edge segment sums
+    flops = s.degree * (6.0 * N_EDGES * K) / devices
+    hbm = s.degree * (N_EDGES * (3 * 4 + 2 * 4 * K) / devices
+                      + 2 * N_NODES * K * 4)
+    return {
+        "arch": f"sped-graph-{variant}",
+        "shape": f"n{N_NODES >> 20}M_e{N_EDGES >> 20}M_k{K}",
+        "mesh": "multipod" if multi_pod else "pod",
+        "status": "ok", "kind": "sped_step",
+        "devices": devices,
+        "seconds": round(time.time() - t0, 1),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "analytic": {"flops_per_dev": flops, "hbm_bytes_per_dev": hbm,
+                     "degree": s.degree},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "collectives": coll,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="all",
+                    choices=["limit251", "cheb64", "cheb64_fused",
+                             "cheb64_bf16", "all"])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    variants = (["limit251", "cheb64", "cheb64_fused", "cheb64_bf16"]
+                if args.variant == "all" else [args.variant])
+    meshes = [False, True] if args.mesh == "both" else \
+        [args.mesh == "multipod"]
+    for var in variants:
+        for mp in meshes:
+            res = run_cell(var, mp)
+            tag = f"sped__{var}__{'multipod' if mp else 'pod'}"
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+            c = res["collectives"]
+            print(f"[sped-dryrun] {tag}: coll={c['total_bytes']:.3g}B "
+                  f"(AR count {c['count'].get('all-reduce', 0)}) "
+                  f"temp={res['memory']['temp_bytes']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Loop-aware HLO cost analysis for the dry-run.
+
+XLA's cost_analysis() counts while-loop bodies ONCE; these helpers parse
+the post-SPMD HLO text, recover per-computation execution multipliers
+from the compiler's known_trip_count annotations, and produce
+loop-corrected collective-byte totals (the roofline's collective term).
+Also quantifies the CPU backend's bf16->f32 dot-upcast artifact so
+memory numbers can be TPU-projected."""
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+    r"(?:.*?\"known_trip_count\":\{\"n\":\"(\d+)\"\})?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """{computation_name: body_text} from post-optimization HLO."""
+    comps = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo_text.splitlines():
+        if cur_name is None:
+            m = _COMP_HEAD_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur_name, cur_lines, depth = m.group(1), [], 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+        else:
+            cur_lines.append(line)
+    return comps
+
+
+def _loop_multipliers(comps: dict) -> dict:
+    """Per-computation execution-count multiplier: while bodies run
+    trip_count times (XLA's cost_analysis counts them ONCE — this is the
+    correction).  Trip counts come from the compiler's own
+    ``known_trip_count`` backend_config on each while op; fallback is the
+    largest integer constant in the loop condition."""
+    whiles = {name: _WHILE_RE.findall(text) for name, text in comps.items()}
+    mult = {name: 0 for name in comps}
+    referenced = set()
+    for ws in whiles.values():
+        for c, b, _t in ws:
+            referenced.add(c)
+            referenced.add(b)
+    roots = [n for n in comps if n not in referenced]
+
+    def visit(name, m):
+        if name not in comps or m <= mult.get(name, 0):
+            return
+        mult[name] = m
+        for cond, body, trip_s in whiles.get(name, ()):
+            if trip_s:
+                trip = int(trip_s)
+            else:
+                consts = [int(c) for c in
+                          _CONST_RE.findall(comps.get(cond, ""))]
+                trip = max(consts) if consts else 1
+            visit(cond, m * trip)
+            visit(body, m * trip)
+
+    for r in roots:
+        visit(r, 1)
+    return mult
+
+
+_UPCAST_RE = re.compile(
+    r"ROOT %convert[^=]*= f32\[([0-9,]+)\][^ ]* convert\(%param")
+
+
+def cpu_dot_upcast_bytes(hlo_text: str) -> int:
+    """Bytes of hoisted bf16->f32 whole-weight conversions.  The CPU
+    backend has no native bf16 dot, so XLA converts weight stacks to f32
+    before the layer loop; a real TPU consumes bf16 on the MXU directly.
+    The roofline subtracts this from temp_bytes as a documented
+    CPU-artifact correction."""
+    total = 0
+    for m in _UPCAST_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        total += n * 4
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT sizes of collective ops in post-SPMD HLO, per op kind,
+    LOOP-AWARE: ops inside while bodies are multiplied by the loop trip
+    count (scan-over-layers etc.).  Result size == payload moved per
+    device for AG/AR; adequate roofline proxy for all five kinds."""
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(comps)
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for name, text in comps.items():
+        m = mults.get(name, 1) or 1
+        for match in _COLL_RE.finditer(text):
+            shape_str = match.group(1) or match.group(2)
+            kind = match.group(3)
+            out[kind] = out.get(kind, 0) + _shape_bytes(shape_str) * m
+            count[kind] = count.get(kind, 0) + m
+    return {"bytes": out, "count": count,
+            "total_bytes": int(sum(out.values()))}
+
+

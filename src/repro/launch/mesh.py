@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") —
+the "pod" axis carries only data parallelism + gradient reduction, so the
+only cross-pod (DCN) collective is the once-per-step gradient psum (and
+FSDP gathers for the archs that enable it), which is the layout that
+scales to 1000+ nodes.
+
+Functions, not module constants: importing this module never touches jax
+device state (required for the dry-run's device-count override to work).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Whatever this host has (tests/examples): (1, N) data x model."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,263 @@
+"""Partitioning rules: map every param / optimizer / cache tensor to a
+PartitionSpec for the production mesh.
+
+Policy (DESIGN.md Sec. 5):
+  * TP ("model"): attention heads, FFN hidden, MoE experts (EP), Mamba2
+    heads, vocab dim of the embedding tables.
+  * DP ("pod", "data"): batch dims of activations/caches; FSDP-sharding
+    of params + optimizer moments for archs whose per-TP-shard params
+    exceed `FSDP_THRESHOLD` bytes (XLA inserts the per-layer all-gathers
+    inside the layer scan = classic ZeRO-3 streaming).
+  * ZeRO-1 moments: additionally sharded over DP on the first free,
+    divisible dim.
+  * every rule degrades to replication when the dim is not divisible by
+    the mesh extent (never crashes on an odd head count).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# params bigger than this per TP shard get FSDP over the dp axes
+FSDP_THRESHOLD = 3 * 2 ** 30
+
+
+def mesh_axes(mesh: Mesh):
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return dp, tp
+
+
+def _extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+# --------------------------------------------------------------------------
+# Param rules
+# --------------------------------------------------------------------------
+
+# (match-substrings, base_spec builder) — first match wins.  Specs are for
+# the UNSTACKED layer tensor; a leading layer axis gets None prepended.
+def _param_rule(names: tuple[str, ...]) -> tuple[str | None, ...]:
+    """Returns per-dim logical axes for the UNSTACKED tensor, rightmost
+    dims aligned ('tp' on the dim noted)."""
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    if name == "table":  # embed/unembed (vocab, d)
+        return ("tp", "fsdp")
+    if name in ("wq", "wk", "wv", "w_kv_up"):
+        return ("fsdp", "tp")
+    if name == "wo":
+        return ("tp", "fsdp")
+    if name in ("bq", "bk", "bv"):
+        return ("tp",)
+    if name in ("w_gate", "w_up"):
+        if parent in ("moe",) or len(names) >= 2 and names[-2] == "moe":
+            return ("tp", "fsdp", None)
+        return ("fsdp", "tp")
+    if name == "w_down":
+        if parent in ("moe",):
+            return ("tp", "fsdp", None)
+        return ("tp", "fsdp")
+    if name == "router":
+        return (None, None)
+    if name in ("w_kv_down", "w_k_rope"):
+        return ("fsdp", None)
+    if name == "w_zx":
+        return ("fsdp", "tp")
+    if name == "w_bcdt":
+        return ("fsdp", None)
+    if name == "conv_w_x":
+        return (None, "tp")
+    if name == "conv_b_x":
+        return ("tp",)
+    if name == "w_out":  # ssm out proj (d_in, d)
+        return ("tp", "fsdp")
+    return tuple(None for _ in ())  # scalar/1d -> replicated (filled later)
+
+
+def _is_moe_leaf(path_names):
+    return "moe" in path_names or (
+        "shared" in path_names and "moe" not in path_names and False)
+
+
+def param_specs(cfg: ArchConfig, params_shapes, mesh: Mesh,
+                fsdp: bool | None = None):
+    """Pytree of PartitionSpec matching `params_shapes` (shapes from
+    jax.eval_shape(init))."""
+    dp, tp = mesh_axes(mesh)
+    if fsdp is None:
+        tp_ext = _extent(mesh, tp)
+        total_bytes = sum(
+            int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params_shapes))
+        fsdp = total_bytes / max(tp_ext, 1) > FSDP_THRESHOLD
+
+    def one(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        shape = leaf.shape
+        # moe expert tensors: 3d (E, d, f) — expert dim EP-sharded
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down") \
+                and "shared" not in names:
+            base = ("tp", "fsdp", None)
+        else:
+            base = _param_rule(names)
+        # align base to the rightmost dims (stacked layer axes lead)
+        spec: list = [None] * len(shape)
+        for i, ax in enumerate(base):
+            di = len(shape) - len(base) + i
+            if di < 0:
+                continue
+            if ax == "tp" and tp and shape[di] % _extent(mesh, tp) == 0:
+                spec[di] = tp
+            elif ax == "fsdp" and fsdp and dp and \
+                    shape[di] % _extent(mesh, dp) == 0:
+                spec[di] = dp if len(dp) > 1 else dp[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def moment_specs(param_spec_tree, params_shapes, mesh: Mesh):
+    """ZeRO-1: moments = param spec + dp sharding on the first free,
+    divisible dim (if params aren't already dp-sharded)."""
+    dp, _ = mesh_axes(mesh)
+    dp_ext = _extent(mesh, dp)
+
+    def one(spec: P, leaf):
+        if not dp or dp_ext == 1:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        if any(a in used for a in dp):
+            return spec  # already dp-sharded (fsdp)
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % dp_ext == 0 and leaf.shape[i] > 0:
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(one, param_spec_tree, params_shapes)
+
+
+# --------------------------------------------------------------------------
+# Activation / batch / cache rules
+# --------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_shapes):
+    """tokens/labels (b, s) + stub frontends (b, s, d): batch over dp."""
+    dp, _ = mesh_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if dp and leaf.shape[0] % _extent(mesh, dp) == 0:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes):
+    """Serve-state shardings (typed dispatch over the cache NamedTuples —
+    pytree paths don't carry NamedTuple field names).  Leading axis is
+    the stacked layer axis; batch then sequence follow:
+      KV k/v (L, b, s, kv, hd):  b->dp, s->model (context parallel; this
+                                 is what makes 128 x 32k caches fit)
+      MLA c_kv (L, b, s, r):     b->dp, s->model
+      SSM state (L, b, h, p, n): b->dp, h->model
+      cross_kv (L, b, se, h, hd): b->dp, h->model
+    Dims not divisible by the mesh extent fall back to replication.
+    """
+    from repro.models.attention import KVCache, MLACache
+    from repro.models.model import ServeState
+    from repro.models.ssm import SSMCache
+    dp, tp = mesh_axes(mesh)
+    dp_ax = (dp if len(dp) > 1 else dp[0]) if dp else None
+    tp_ext = _extent(mesh, tp)
+    dp_ext = _extent(mesh, dp)
+
+    def dim(shape, i, logical):
+        if i >= len(shape):
+            return None
+        if logical == "dp" and dp and shape[i] % dp_ext == 0:
+            return dp_ax
+        if logical == "tp" and tp and shape[i] % tp_ext == 0:
+            return tp
+        return None
+
+    def mk(leaf, logicals):
+        """logicals: per-dim logical axis names aligned to leaf dims."""
+        if leaf is None:
+            return None
+        shape = leaf.shape
+        spec = [dim(shape, i, l) if l else None
+                for i, l in enumerate(logicals[: len(shape)])]
+        spec += [None] * (len(shape) - len(spec))
+        return P(*spec)
+
+    def kv_cache(c: KVCache):
+        # (L, b, s, kv, hd); scales (L, b, s, kv, 1)
+        sp = (None, "dp", "tp", None, None)
+        return KVCache(
+            k=mk(c.k, sp), v=mk(c.v, sp),
+            k_scale=mk(c.k_scale, sp), v_scale=mk(c.v_scale, sp),
+            length=P())
+
+    def mla_cache(c: MLACache):
+        sp = (None, "dp", "tp", None)
+        return MLACache(c_kv=mk(c.c_kv, sp), k_rope=mk(c.k_rope, sp),
+                        length=P())
+
+    def ssm_cache(c: SSMCache):
+        return SSMCache(
+            state=mk(c.state, (None, "dp", "tp", None, None)),
+            conv_x=mk(c.conv_x, (None, "dp", None, "tp")),
+            conv_bc=mk(c.conv_bc, (None, "dp", None, None)),
+            length=P())
+
+    def dispatch(c):
+        if c is None:
+            return None
+        if isinstance(c, KVCache):
+            return kv_cache(c)
+        if isinstance(c, MLACache):
+            return mla_cache(c)
+        if isinstance(c, SSMCache):
+            return ssm_cache(c)
+        if isinstance(c, tuple) and not hasattr(c, "_fields"):
+            # whisper cross_kv: (k, v) each (L, b, se, h, hd)
+            return tuple(mk(x, (None, "dp", None, "tp", None)) for x in c)
+        raise TypeError(f"unknown cache node {type(c)}")
+
+    assert isinstance(cache_shapes, ServeState)
+    return ServeState(
+        caches=dispatch(cache_shapes.caches),
+        cross_kv=dispatch(cache_shapes.cross_kv),
+        attn_caches=dispatch(cache_shapes.attn_caches),
+    )
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

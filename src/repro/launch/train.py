@@ -1,0 +1,180 @@
+"""End-to-end training driver.
+
+Two modes share one fault-tolerant loop (checkpoint/auto-resume/retry):
+
+  * ``--mode lm``   — train an assigned-pool architecture (reduced or
+    full config) on the synthetic deterministic token pipeline.
+  * ``--mode sped`` — the paper's workload: train the eigenvector panel V
+    with a stochastic solver on an edge stream (this IS SPED's "training
+    loop"; the panel is the model, the edge minibatch is the batch).
+
+Usage (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.train --mode sped --steps 600
+  PYTHONPATH=src python -m repro.launch.train --mode lm --arch qwen3-4b \
+      --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import logging
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as model_lib
+from repro.models.frontends import synthetic_frontend
+from repro.train import checkpoint as ckpt
+from repro.train import fault
+from repro.train import optimizer as opt_lib
+
+log = logging.getLogger("train")
+
+
+def train_lm(args):
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        batch_size, seq = 4, 64
+    else:
+        batch_size, seq = args.batch, args.seq
+    mesh = make_local_mesh()
+    opt_cfg = opt_lib.OptConfig(lr=args.lr, warmup_steps=20,
+                                total_steps=args.steps,
+                                compress_grads=args.compress_grads)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, global_batch=batch_size,
+                         seq_len=seq, seed=args.seed)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model_lib.train_loss(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = opt_lib.apply(opt_cfg, opt_state, params,
+                                              grads)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    with jax.set_mesh(mesh):
+        params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
+        opt_state = opt_lib.init(opt_cfg, params)
+        start = 0
+        if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), extra, start = ckpt.restore_with_fallback(
+                args.ckpt_dir, (params, opt_state))
+            log.info("resumed from step %d", start)
+
+        fe_key = jax.random.PRNGKey(args.seed + 1)
+        losses = []
+        for step in range(start, args.steps):
+            batch = pipe.batch_at(step)
+            batch.update(synthetic_frontend(
+                jax.random.fold_in(fe_key, step), cfg, batch_size))
+            params, opt_state, m = train_step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+            if step % args.log_every == 0:
+                print(f"step {step} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}",
+                      flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                fault.retrying(ckpt.save)(
+                    args.ckpt_dir, step + 1, (params, opt_state),
+                    extra={"loss": float(m["loss"])})
+        if args.ckpt_dir:
+            fault.retrying(ckpt.save)(args.ckpt_dir, args.steps,
+                                      (params, opt_state))
+    assert np.isfinite(losses).all(), "training diverged"
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return losses
+
+
+def train_sped(args):
+    """The paper's end-to-end driver: stochastic bottom-k eigensolver on
+    a clique graph with the limit-series dilation, checkpointed."""
+    from repro.core import (SolverConfig, limit_neg_exp, metrics,
+                            operators, run_solver, laplacian_dense,
+                            spectral_radius_upper_bound)
+    from repro.core import graphs, solvers
+    from repro.core.kmeans import cluster_agreement, kmeans
+
+    g, truth = graphs.clique_graph(args.nodes, args.clusters,
+                                   seed=args.seed)
+    rho = float(spectral_radius_upper_bound(g))
+    series = limit_neg_exp(args.degree, scale=args.tau / rho)
+    op = operators.minibatch_operator(g, series, batch_edges=args.batch_edges)
+    k = args.clusters + 1
+    state = solvers.init_state(jax.random.PRNGKey(args.seed), g.num_nodes, k)
+    step_fn = jax.jit(
+        lambda st, key: solvers.mu_eg_step(st, op(key, st.v), args.lr))
+
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        (v,), extra, start = ckpt.restore_with_fallback(
+            args.ckpt_dir, (state.v,))
+        state = solvers.SolverState(v=v, step=jnp.asarray(start, jnp.int32))
+        log.info("resumed from step %d", start)
+
+    key = jax.random.PRNGKey(args.seed + 7)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state = step_fn(state, jax.random.fold_in(key, step))
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            fault.retrying(ckpt.save)(args.ckpt_dir, step + 1, (state.v,))
+    jax.block_until_ready(state.v)
+    dur = time.time() - t0
+
+    l_dense = laplacian_dense(g)
+    _, v_star = metrics.ground_truth_bottom_k(l_dense, k)
+    err = float(metrics.subspace_error(state.v, v_star))
+    emb = state.v[:, 1: 1 + args.clusters]
+    emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True),
+                            1e-12)
+    labels = kmeans(jax.random.PRNGKey(1), emb, args.clusters).labels
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), args.clusters))
+    print(f"steps {args.steps - start} in {dur:.1f}s "
+          f"({(args.steps - start) / max(dur, 1e-9):.1f} steps/s)")
+    print(f"subspace_error {err:.4f} cluster_accuracy {acc:.3f}")
+    return err, acc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "sped"], default="sped")
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compress-grads", action="store_true")
+    # sped
+    ap.add_argument("--nodes", type=int, default=200)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--degree", type=int, default=51)
+    ap.add_argument("--tau", type=float, default=8.0)
+    ap.add_argument("--batch-edges", type=int, default=1024)
+    args = ap.parse_args(argv)
+    if args.lr is None:
+        args.lr = 3e-4 if args.mode == "lm" else 0.1
+    logging.basicConfig(level=logging.INFO)
+    if args.mode == "lm":
+        train_lm(args)
+    else:
+        train_sped(args)
+
+
+if __name__ == "__main__":
+    main()

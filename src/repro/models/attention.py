@@ -1,0 +1,490 @@
+"""Attention: GQA (w/ optional QKV bias, qk-norm) and MLA (DeepSeek-V2),
+with chunked (flash-style) training attention and KV-cache decode.
+
+Sharding layout:
+  * training/prefill activations: (batch="dp", seq, heads="tp", hd)
+  * KV cache: (batch="dp", seq="sp", kv_heads, hd) — the cache SEQUENCE is
+    context-parallel over the model axis, which is what lets 32k-token
+    caches for 128-request batches fit per-chip HBM at decode time; the
+    softmax over the sharded seq dim lowers to partial reductions + a
+    small all-reduce (GSPMD).  KV heads are additionally sharded when
+    divisible (decided by config, not here).
+  * decode int8 cache: quantized per (position, head) with f32 scales.
+
+The chunked attention scans over KV blocks with a running
+(max, sum, acc) triple — the flash-attention recurrence in pure jnp —
+so 32k prefill never materializes an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+from repro.models.sharding import maybe_shard
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        r = cfg.kv_lora_rank
+        rd = cfg.qk_rope_head_dim
+        vd = cfg.v_head_dim
+        p = {
+            "wq": dense_init(ks[0], (d, h * (hd + rd))),
+            "w_kv_down": dense_init(ks[1], (d, r)),
+            "w_k_rope": dense_init(ks[2], (d, rd)),
+            "w_kv_up": dense_init(ks[3], (r, h * (hd + vd))),
+            "wo": dense_init(ks[4], (h * vd, d)),
+            "kv_norm": init_rmsnorm(r),
+        }
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Flash-style chunked core:  softmax(Q K^T + mask) V  without (S, S).
+# --------------------------------------------------------------------------
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset, chunk: int = 1024):
+    """q: (b, sq, h, dh), k/v: (b, sk, h, dh) (kv already broadcast to h).
+
+    Scans KV chunks with the running-max/sum flash recurrence.
+    q_offset: absolute position of q[0] (for causal masking vs cache).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # b h sq dh
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nck = (sk + pad) // chunk
+    kf = kf.reshape(b, h, nck, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vf = vf.reshape(b, h, nck, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, s, acc = carry
+        kc, vc, cidx = inputs
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((sq, chunk), bool)
+        valid = (k_pos < sk)[None, :]
+        logits = jnp.where((mask & valid)[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        s_new = s * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, s_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(
+        body, (m0, s0, a0), (kf, vf, jnp.arange(nck)))
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # b sq h dh
+
+
+def _dense_attention(q, k, v, *, causal: bool, q_offset):
+    """Reference einsum attention for short sequences / decode."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        mask = jnp.arange(sk)[None, :] <= q_pos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _broadcast_kv(k, h):
+    """(b, s, kv, dh) -> (b, s, h, dh) by repeating groups."""
+    b, s, kv, dh = k.shape
+    if kv == h:
+        return k
+    rep = h // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+# --------------------------------------------------------------------------
+# KV cache (bf16 or int8-quantized)
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (b, max_s, kv, dh)  cache dtype
+    v: jax.Array
+    k_scale: jax.Array | None  # (b, max_s, kv, 1) f32 when int8
+    v_scale: jax.Array | None
+    length: jax.Array  # () int32 — filled positions
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  kv_heads: int, head_dim: int) -> KVCache:
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    shape = (batch, max_seq, kv_heads, head_dim)
+    scales = None
+    if dt == jnp.int8:
+        scales = jnp.zeros((batch, max_seq, kv_heads, 1), jnp.float32)
+    k = maybe_shard(jnp.zeros(shape, dt), "dp", "sp", None, None)
+    v = maybe_shard(jnp.zeros(shape, dt), "dp", "sp", None, None)
+    return KVCache(k=k, v=v,
+                   k_scale=scales, v_scale=scales,
+                   length=jnp.zeros((), jnp.int32))
+
+
+def _quantize(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale * 127.0), -127, 127)
+    return q.astype(jnp.int8), scale / 127.0
+
+
+def _dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Insert k/v at [pos : pos + s_new) (dynamic_update_slice)."""
+    if cache.k.dtype == jnp.int8:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        k = jax.lax.dynamic_update_slice(cache.k, kq, (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, vq, (0, pos, 0, 0))
+        k_sc = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0, 0))
+        v_sc = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, pos, 0, 0))
+        return KVCache(k, v, k_sc, v_sc, pos + k_new.shape[1])
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0))
+    return KVCache(k, v, None, None, pos + k_new.shape[1])
+
+
+def cache_kv(cache: KVCache, dtype):
+    if cache.k.dtype == jnp.int8:
+        return (_dequantize(cache.k, cache.k_scale, dtype),
+                _dequantize(cache.v, cache.v_scale, dtype))
+    return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA forward
+# --------------------------------------------------------------------------
+
+def _project_qkv(p, cfg: ArchConfig, x, positions):
+    dt = x.dtype
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    b, s, _ = x.shape
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = maybe_shard(q, "dp", None, "tp", None)
+    k = maybe_shard(k, "dp", None, None, None)
+    return q, k, v
+
+
+def gqa_train(p, cfg: ArchConfig, x, *, causal: bool = True,
+              chunk: int = 1024):
+    """Full-sequence attention (training / prefill scoring)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    kb = _broadcast_kv(k, cfg.num_heads)
+    vb = _broadcast_kv(v, cfg.num_heads)
+    if s <= 2048:
+        out = _dense_attention(q, kb, vb, causal=causal, q_offset=0)
+    else:
+        out = _chunked_attention(q, kb, vb, causal=causal, q_offset=0,
+                                 chunk=chunk)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def _cp_specs(mesh, batch: int, seq: int):
+    """(batch_axes, seq_axis) for context-parallel decode under `mesh`,
+    honoring divisibility; None where unshardable."""
+    from jax.sharding import PartitionSpec as P
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_ext = 1
+    for a in dp:
+        dp_ext *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+    b_ax = (dp if len(dp) > 1 else dp[0]) if dp and batch % dp_ext == 0 \
+        else None
+    tp_ext = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+    s_ax = "model" if "model" in names and seq % tp_ext == 0 else None
+    return b_ax, s_ax
+
+
+def _decode_attention_cp(cfg: ArchConfig, q, cache: KVCache, mesh):
+    """CONTEXT-PARALLEL decode attention: the cache stays sharded along
+    the sequence axis; each model-shard computes a partial softmax
+    (max / sum / weighted值) over its local KV slice and the shards
+    combine with one tiny psum — the full K/V is never gathered.
+
+    This is the #Perf iteration that brought qwen1.5-32b decode_32k from
+    23 GB/device (args+temp, OOM on v5e) to fitting: the GSPMD fallback
+    all-gathers the dequantized bf16 cache (~12 GB temp), the shard_map
+    form keeps the per-device temp at the local slice (~0.8 GB).
+    """
+    import functools as ft
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    b, _, h, hd = q.shape
+    sk = cache.k.shape[1]
+    b_ax, s_ax = _cp_specs(mesh, b, sk)
+    if s_ax is None:
+        return None  # fall back to the gather path
+    axes = (s_ax,) if s_ax else ()
+    kv_spec = P(b_ax, s_ax, None, None)
+    q_spec = P(b_ax, None, None, None)
+    scale_specs = (kv_spec, kv_spec) if cache.k_scale is not None else \
+        (None, None)
+
+    @ft.partial(
+        shard_map, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, scale_specs[0], scale_specs[1],
+                  P(), P()),
+        out_specs=q_spec, check_vma=False)
+    def attend(qb, k_loc, v_loc, k_sc, v_sc, length, s_offsets):
+        # local slice index -> global position for the length mask
+        idx = jax.lax.axis_index(s_ax) if s_ax else 0
+        s_loc = k_loc.shape[1]
+        pos = s_offsets + idx * s_loc + jnp.arange(s_loc)
+        if k_sc is not None:
+            k_f = k_loc.astype(jnp.float32) * k_sc
+            v_f = v_loc.astype(jnp.float32) * v_sc
+        else:
+            k_f = k_loc.astype(jnp.float32)
+            v_f = v_loc.astype(jnp.float32)
+        kb = _broadcast_kv(k_f, h)
+        vb = _broadcast_kv(v_f, h)
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk",
+                            qb.astype(jnp.float32) * scale, kb)
+        logits = jnp.where((pos < length)[None, None, None, :], logits,
+                           NEG_INF)
+        m_loc = logits.max(axis=-1)  # (b, h, 1)
+        m_glb = jax.lax.pmax(m_loc, s_ax)
+        p_ = jnp.exp(logits - m_glb[..., None])
+        s_loc_sum = p_.sum(axis=-1)
+        acc = jnp.einsum("bhqk,bkhd->bqhd", p_, vb)
+        s_glb = jax.lax.psum(s_loc_sum, s_ax)
+        acc = jax.lax.psum(acc, s_ax)
+        out = acc / jnp.maximum(s_glb, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(qb.dtype)
+
+    zero = jnp.zeros((), jnp.int32)
+    return attend(q, cache.k, cache.v, cache.k_scale, cache.v_scale,
+                  cache.length, zero)
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache: KVCache):
+    """Single-step decode: x (b, 1, d) against the cache.  Uses the
+    context-parallel partial-softmax path when a mesh is active and the
+    cache sequence is shardable; plain gather path otherwise."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache.length[None], (b, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos)
+    cache = cache_update(cache, k_new, v_new, cache.length)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    out = None
+    if not mesh.empty:
+        out = _decode_attention_cp(cfg, q, cache, mesh)
+    if out is None:
+        k, v = cache_kv(cache, x.dtype)
+        kb = _broadcast_kv(k, cfg.num_heads)
+        vb = _broadcast_kv(v, cfg.num_heads)
+        sk = kb.shape[1]
+        logits_mask = jnp.arange(sk) < cache.length
+        scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk",
+                            q.astype(jnp.float32) * scale,
+                            kb.astype(jnp.float32))
+        logits = jnp.where(logits_mask[None, None, None, :], logits,
+                           NEG_INF)
+        pr = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pr, vb.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype)), cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache of (kv_lora + rope) dims
+# --------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (b, max_s, r) compressed latents
+    k_rope: jax.Array  # (b, max_s, rd)
+    length: jax.Array
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int) -> MLACache:
+    c = maybe_shard(
+        jnp.zeros((batch, max_seq, cfg.kv_lora_rank), jnp.bfloat16),
+        "dp", "sp", None)
+    kr = maybe_shard(
+        jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), jnp.bfloat16),
+        "dp", "sp", None)
+    return MLACache(c_kv=c, k_rope=kr, length=jnp.zeros((), jnp.int32))
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    dt = x.dtype
+    h, hd, rd, vd = (cfg.num_heads, cfg.head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(
+        b, s, h, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_kv_down"].astype(dt))
+    c_kv = rmsnorm(p["kv_norm"], c_kv, cfg.rms_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_k_rope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, cfg: ArchConfig, q_nope, q_rope, c_kv, k_rope, *,
+                causal, q_offset, length=None):
+    """Attention in the compressed space: expand c_kv to per-head K_nope/V."""
+    dt = q_nope.dtype
+    h, hd, vd = cfg.num_heads, cfg.head_dim, cfg.v_head_dim
+    b, sk, r = c_kv.shape
+    kv = jnp.einsum("bsr,re->bse", c_kv, p["w_kv_up"].astype(dt)).reshape(
+        b, sk, h, hd + vd)
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    sq = q_nope.shape[1]
+    scale = 1.0 / jnp.sqrt(hd + cfg.qk_rope_head_dim).astype(jnp.float32)
+    logits = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                   k_nope.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        mask = jnp.arange(sk)[None, :] <= q_pos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if length is not None:
+        logits = jnp.where((jnp.arange(sk) < length)[None, None, None],
+                           logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32)).astype(dt)
+    out = out.reshape(b, sq, h * vd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+
+
+def mla_train(p, cfg: ArchConfig, x, *, causal: bool = True, chunk: int = 0):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    # chunk queries to bound the (b, h, sq, sk) logits when s is large
+    if s > 4096:
+        qc = 1024
+        nq = s // qc
+
+        def body(i, acc):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * qc, qc, 1)
+            o = _mla_attend(p, cfg, sl(q_nope), sl(q_rope), c_kv, k_rope,
+                            causal=causal, q_offset=i * qc)
+            return jax.lax.dynamic_update_slice_in_dim(acc, o, i * qc, 1)
+
+        out = jax.lax.fori_loop(
+            0, nq, body, jnp.zeros((b, s, cfg.d_model), x.dtype))
+        return out, (c_kv, k_rope)
+    out = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, causal=causal,
+                      q_offset=0)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache: MLACache):
+    """Decode with WEIGHT ABSORPTION: attention runs entirely in the
+    compressed (kv_lora + rope) space, never expanding per-head K/V for
+    the cache — this is MLA's serving-memory advantage and keeps the
+    per-step transient O(b * s * r) instead of O(b * s * h * (hd+vd))."""
+    b = x.shape[0]
+    dt = x.dtype
+    h, hd, rd, vd, r = (cfg.num_heads, cfg.head_dim, cfg.qk_rope_head_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    pos = jnp.broadcast_to(cache.length[None], (b, 1))
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, cfg, x, pos)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, cache.length, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, cache.length, 0))
+    new_cache = MLACache(c_kv, k_rope, cache.length + 1)
+
+    w_up = p["w_kv_up"].astype(dt).reshape(r, h, hd + vd)
+    w_up_k, w_up_v = w_up[..., :hd], w_up[..., hd:]
+    # absorb k-up into the query:  q_eff = q_nope @ W_up_k^T  (b,1,h,r)
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_up_k)
+    ckv = c_kv.astype(dt)
+    krope = k_rope.astype(dt)
+    scale = 1.0 / jnp.sqrt(hd + rd).astype(jnp.float32)
+    logits = (
+        jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32),
+                   ckv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                     krope.astype(jnp.float32))
+    ) * scale
+    sk = ckv.shape[1]
+    logits = jnp.where((jnp.arange(sk) < new_cache.length)[None, None, None],
+                       logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pr, ckv.astype(jnp.float32))  # latent
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_up_v.astype(jnp.float32))
+    out = out.astype(dt).reshape(b, 1, h * vd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt)), new_cache

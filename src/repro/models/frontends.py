@@ -1,0 +1,32 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; input_specs() provides precomputed
+frame/patch embeddings).
+
+These helpers define the shapes/dtypes of the stub tensors and a
+deterministic synthetic generator for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def frontend_spec(cfg: ArchConfig, batch: int):
+    """ShapeDtypeStruct-compatible (shape, dtype) for the stub tensors."""
+    if cfg.family == "encdec":
+        return {"frames": ((batch, cfg.encoder_seq, cfg.d_model),
+                           jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {"patches": ((batch, cfg.num_patch_tokens, cfg.d_model),
+                            jnp.bfloat16)}
+    return {}
+
+
+def synthetic_frontend(key, cfg: ArchConfig, batch: int):
+    out = {}
+    for name, (shape, dtype) in frontend_spec(cfg, batch).items():
+        out[name] = (jax.random.normal(key, shape, jnp.float32) * 0.02
+                     ).astype(dtype)
+    return out

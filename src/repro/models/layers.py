@@ -1,0 +1,97 @@
+"""Shared model layers: norms, rotary embeddings, gated MLP, embedding.
+
+Pure-function style: `init_*` returns a param pytree; `apply` functions
+take (params, x).  Compute dtype is bf16 with f32 accumulations and f32
+norm statistics; params are stored f32 (cast at use).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import maybe_shard
+
+Initializer = jax.nn.initializers.Initializer
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# --- RMSNorm ----------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# --- Rotary position embeddings ---------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- Gated MLP (SwiGLU) -----------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, (d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d_model)),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, (d_model, d_ff))
+    return p
+
+
+def mlp(params, x):
+    """SwiGLU when 'w_gate' present, classic GELU MLP otherwise; hidden
+    dim tensor-sharded ("tp")."""
+    dt = x.dtype
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    h = maybe_shard(h, "dp", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+
+
+# --- Embedding --------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.01}
+
+
+def embed(params, tokens):
+    return params["table"].astype(COMPUTE_DTYPE)[tokens]
+
+
+def unembed(params, x):
+    """Logits; vocab dim tensor-sharded."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    return maybe_shard(logits, "dp", None, "tp")

@@ -1,0 +1,425 @@
+"""Unified model API over all assigned architecture families.
+
+    params = init(key, cfg)
+    loss, metrics = train_loss(params, cfg, batch)
+    logits, caches = prefill(params, cfg, batch)        # serving
+    logits, caches = decode_step(params, cfg, caches, tokens)
+
+`batch` always carries "tokens" and "labels"; modality archs add stub
+frontend tensors ("frames" for whisper, "patches" for llava) produced by
+input_specs() — the frontends themselves are stubs per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.layers import (COMPUTE_DTYPE, dense_init, embed,
+                                 init_embedding, init_rmsnorm, rmsnorm)
+from repro.models.sharding import maybe_shard
+
+
+def _block_kind(cfg: ArchConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe",
+            "ssm": "ssm"}.get(cfg.family, "dense")
+
+
+def _hybrid_layout(cfg: ArchConfig):
+    n_groups = cfg.num_layers // cfg.attn_every
+    per_group = cfg.attn_every - 1
+    trailing = cfg.num_layers - n_groups * cfg.attn_every
+    return n_groups, per_group, trailing
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"table": dense_init(ks[1], (cfg.vocab_size,
+                                                    cfg.d_model), in_axis=1)}
+    if cfg.family == "hybrid":
+        n_groups, per_group, trailing = _hybrid_layout(cfg)
+        p["ssm_layers"] = tfm.init_stack(ks[2], cfg, "ssm",
+                                         n_groups * per_group + trailing)
+        p["shared_attn"] = tfm.init_block(ks[3], cfg, "dense")
+    elif cfg.family == "encdec":
+        p["enc_layers"] = tfm.init_stack(ks[2], cfg, "dense",
+                                         cfg.encoder_layers)
+        p["enc_norm"] = init_rmsnorm(cfg.d_model)
+        p["layers"] = tfm.init_stack(ks[3], cfg, "cross", cfg.num_layers)
+    else:
+        p["layers"] = tfm.init_stack(ks[2], cfg, _block_kind(cfg),
+                                     cfg.num_layers)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Embedding + modality stubs
+# --------------------------------------------------------------------------
+
+def _input_embeddings(p, cfg: ArchConfig, batch) -> jax.Array:
+    x = embed(p["embed"], batch["tokens"])  # (b, s, d) bf16
+    if cfg.family == "vlm" and "patches" in batch:
+        # anyres stub: precomputed patch embeddings replace the first
+        # num_patch_tokens positions
+        np_ = cfg.num_patch_tokens
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x[:, np_:, :]], axis=1)
+    return maybe_shard(x, "dp", None, None)
+
+
+def _encode(p, cfg: ArchConfig, frames) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (conv frontend stubbed)."""
+    x = maybe_shard(frames.astype(COMPUTE_DTYPE), "dp", None, None)
+
+    def one(x, layer_p):
+        # non-causal self attention encoder block
+        h = rmsnorm(layer_p["pre_norm"], x, cfg.rms_eps)
+        a, _ = attn_mod.gqa_train(layer_p["attn"], cfg, h, causal=False)
+        x = x + a
+        h = rmsnorm(layer_p["post_norm"], x, cfg.rms_eps)
+        from repro.models.layers import mlp
+        return x + mlp(layer_p["mlp"], h), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(one), x, p["enc_layers"])
+    return rmsnorm(p["enc_norm"], x, cfg.rms_eps)
+
+
+def _backbone_train(p, cfg: ArchConfig, x, batch):
+    """Run the stack; returns (hidden, aux_loss)."""
+    if cfg.family == "hybrid":
+        return _hybrid_train(p, cfg, x)
+    if cfg.family == "encdec":
+        enc_out = _encode(p, cfg, batch["frames"])
+        return tfm.stack_train(p["layers"], cfg, x, "cross", cross=enc_out)
+    return tfm.stack_train(p["layers"], cfg, x, _block_kind(cfg))
+
+
+def _hybrid_train(p, cfg: ArchConfig, x):
+    n_groups, per_group, trailing = _hybrid_layout(cfg)
+    ssm_p = p["ssm_layers"]
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * per_group].reshape(
+            (n_groups, per_group) + a.shape[1:]), ssm_p)
+    shared = p["shared_attn"]
+
+    @jax.checkpoint
+    def group(x, gp):
+        x, _ = tfm.stack_train(gp, cfg, x, "ssm", remat=False)
+        x, _ = tfm.block_train(shared, cfg, x, "dense")
+        return maybe_shard(x, "dp", None, None), None
+
+    x, _ = jax.lax.scan(group, x, grouped)
+    if trailing:
+        tail = jax.tree.map(lambda a: a[n_groups * per_group:], ssm_p)
+        x, _ = tfm.stack_train(tail, cfg, x, "ssm")
+    return x, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Training loss (chunked vocab projection)
+# --------------------------------------------------------------------------
+
+def _chunked_xent(p, cfg: ArchConfig, hidden, labels, chunk: int = 512):
+    """Cross entropy with the (b, s, vocab) logits never materialized for
+    the full sequence: scan over sequence chunks."""
+    table = (p["embed"]["table"] if cfg.tie_embeddings
+             else p["unembed"]["table"])
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h, lab = inp
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = maybe_shard(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(p, cfg: ArchConfig, batch, aux_weight: float = 0.01):
+    x = _input_embeddings(p, cfg, batch)
+    h, aux = _backbone_train(p, cfg, x, batch)
+    h = rmsnorm(p["final_norm"], h, cfg.rms_eps)
+    loss = _chunked_xent(p, cfg, h, batch["labels"])
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    caches: Any  # stacked per-layer cache pytree (family-specific)
+    cross_kv: Any  # whisper only
+    attn_caches: Any  # hybrid shared-attention caches (stacked per group)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
+    """Allocate empty caches for `batch` requests of context max_seq."""
+    kind = _block_kind(cfg)
+    L = cfg.num_layers
+
+    def stack_cache(make_one, n):
+        caches = [make_one() for _ in range(1)]
+        proto = caches[0]
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), proto)
+
+    if cfg.family == "hybrid":
+        n_groups, per_group, trailing = _hybrid_layout(cfg)
+        n_ssm = n_groups * per_group + trailing
+        ssm_caches = stack_cache(lambda: ssm_mod.init_ssm_cache(cfg, batch),
+                                 n_ssm)
+        attn_caches = stack_cache(
+            lambda: attn_mod.init_kv_cache(cfg, batch, max_seq,
+                                           cfg.num_kv_heads, cfg.head_dim),
+            n_groups)
+        return ServeState(caches=ssm_caches, cross_kv=None,
+                          attn_caches=attn_caches)
+    if cfg.family == "ssm":
+        return ServeState(
+            caches=stack_cache(lambda: ssm_mod.init_ssm_cache(cfg, batch), L),
+            cross_kv=None, attn_caches=None)
+    if cfg.use_mla:
+        return ServeState(
+            caches=stack_cache(
+                lambda: attn_mod.init_mla_cache(cfg, batch, max_seq), L),
+            cross_kv=None, attn_caches=None)
+    return ServeState(
+        caches=stack_cache(
+            lambda: attn_mod.init_kv_cache(cfg, batch, max_seq,
+                                           cfg.num_kv_heads, cfg.head_dim), L),
+        cross_kv=None, attn_caches=None)
+
+
+def decode_step(p, cfg: ArchConfig, state: ServeState, tokens):
+    """tokens: (b, 1) -> next-token logits (b, vocab) + updated caches."""
+    x = embed(p["embed"], tokens)
+    x = maybe_shard(x, "dp", None, None)
+    if cfg.family == "hybrid":
+        x, state = _hybrid_decode(p, cfg, x, state)
+    elif cfg.family == "encdec":
+        x, caches = tfm.stack_decode(p["layers"], cfg, x, "cross",
+                                     state.caches, cross_kv=state.cross_kv)
+        state = state._replace(caches=caches)
+    else:
+        x, caches = tfm.stack_decode(p["layers"], cfg, x, _block_kind(cfg),
+                                     state.caches)
+        state = state._replace(caches=caches)
+    x = rmsnorm(p["final_norm"], x, cfg.rms_eps)
+    table = (p["embed"]["table"] if cfg.tie_embeddings
+             else p["unembed"]["table"])
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return maybe_shard(logits[:, 0, :], "dp", "tp"), state
+
+
+def _hybrid_decode(p, cfg: ArchConfig, x, state: ServeState):
+    n_groups, per_group, trailing = _hybrid_layout(cfg)
+    ssm_p = p["ssm_layers"]
+    grouped_p = jax.tree.map(
+        lambda a: a[: n_groups * per_group].reshape(
+            (n_groups, per_group) + a.shape[1:]), ssm_p)
+    grouped_c = jax.tree.map(
+        lambda a: a[: n_groups * per_group].reshape(
+            (n_groups, per_group) + a.shape[1:]), state.caches)
+    shared = p["shared_attn"]
+
+    def group(i, carry):
+        x, gcs, acs = carry
+        gp = tfm._index_tree(grouped_p, i)
+        gc = tfm._index_tree(gcs, i)
+        ac = tfm._index_tree(acs, i)
+        x, gc = tfm.stack_decode(gp, cfg, x, "ssm", gc)
+        x, ac = tfm.block_decode(shared, cfg, x, "dense", ac)
+        return x, tfm._update_tree(gcs, gc, i), tfm._update_tree(acs, ac, i)
+
+    x, gcs, acs = jax.lax.fori_loop(
+        0, n_groups, group, (x, grouped_c, state.attn_caches))
+    new_ssm = jax.tree.map(
+        lambda a: a.reshape((n_groups * per_group,) + a.shape[2:]), gcs)
+    if trailing:
+        tail_p = jax.tree.map(lambda a: a[n_groups * per_group:], ssm_p)
+        tail_c = jax.tree.map(lambda a: a[n_groups * per_group:], state.caches)
+        x, tail_c = tfm.stack_decode(tail_p, cfg, x, "ssm", tail_c)
+        new_ssm = jax.tree.map(
+            lambda a, t: jnp.concatenate([a, t], axis=0), new_ssm, tail_c)
+    return x, ServeState(caches=new_ssm, cross_kv=None, attn_caches=acs)
+
+
+def prefill(p, cfg: ArchConfig, batch, max_seq: int = 0):
+    """Process the full prompt, build caches, return last-position logits.
+
+    For simplicity and HLO-size parity with training, prefill runs the
+    train-mode stack and then RE-SCANS to collect caches only for the
+    attention families that need explicit K/V (dense/moe/vlm/mla); SSM
+    archs get their states from a chunked scan that returns final states.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = _input_embeddings(p, cfg, batch)
+    kind = _block_kind(cfg)
+
+    if cfg.family == "encdec":
+        from repro.models.layers import mlp
+        enc_out = _encode(p, cfg, batch["frames"])
+        state = init_caches(cfg, b, max_seq)
+
+        def one(x, inp):
+            layer_p, cache = inp
+            h = rmsnorm(layer_p["pre_norm"], x, cfg.rms_eps)
+            a, (k, v) = attn_mod.gqa_train(layer_p["attn"], cfg, h)
+            cache = attn_mod.cache_update(
+                cache._replace(length=jnp.zeros((), jnp.int32)), k, v, 0)
+            x = x + a
+            h = rmsnorm(layer_p["cross_norm"], x, cfg.rms_eps)
+            x = x + tfm._cross_attention(layer_p["cross"], cfg, h, enc_out)
+            ckv = tfm.precompute_cross_kv(layer_p["cross"], cfg, enc_out)
+            h2 = rmsnorm(layer_p["post_norm"], x, cfg.rms_eps)
+            return x + mlp(layer_p["mlp"], h2), (cache, ckv)
+
+        x, (caches, cross_kv) = jax.lax.scan(one, x, (p["layers"],
+                                                      state.caches))
+        h = rmsnorm(p["final_norm"], x, cfg.rms_eps)
+        return _last_logits(p, cfg, h), state._replace(
+            caches=caches, cross_kv=cross_kv)
+
+    if cfg.family == "ssm":
+        state = init_caches(cfg, b, max_seq)
+
+        def one(x, inp):
+            layer_p, cache = inp
+            h = rmsnorm(layer_p["pre_norm"], x, cfg.rms_eps)
+            y, new_cache = ssm_mod.ssm_prefill(layer_p["ssm"], cfg, h, cache)
+            return x + y, new_cache
+
+        x, caches = jax.lax.scan(one, x, (p["layers"], state.caches))
+        h = rmsnorm(p["final_norm"], x, cfg.rms_eps)
+        return _last_logits(p, cfg, h), state._replace(caches=caches)
+
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(p, cfg, x, b, max_seq)
+
+    # attention families: scan collecting per-layer K/V
+    state = init_caches(cfg, b, max_seq)
+
+    def one(x, inp):
+        layer_p, cache = inp
+        h = rmsnorm(layer_p["pre_norm"], x, cfg.rms_eps)
+        if cfg.use_mla:
+            a, (c_kv, k_rope) = attn_mod.mla_train(layer_p["attn"], cfg, h)
+            cache = attn_mod.MLACache(
+                c_kv=jax.lax.dynamic_update_slice(
+                    cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0)),
+                k_rope=jax.lax.dynamic_update_slice(
+                    cache.k_rope, k_rope.astype(cache.k_rope.dtype),
+                    (0, 0, 0)),
+                length=jnp.asarray(s, jnp.int32))
+        else:
+            a, (k, v) = attn_mod.gqa_train(layer_p["attn"], cfg, h)
+            cache = attn_mod.cache_update(
+                cache._replace(length=jnp.zeros((), jnp.int32)), k, v, 0)
+        x = x + a
+        h2 = rmsnorm(layer_p["post_norm"], x, cfg.rms_eps)
+        if kind == "moe":
+            from repro.models import moe as moe_mod
+            f, _ = moe_mod.moe_ffn(layer_p["moe"], cfg, h2)
+        else:
+            from repro.models.layers import mlp
+            f = mlp(layer_p["mlp"], h2)
+        return x + f, cache
+
+    x, caches = jax.lax.scan(one, x, (p["layers"], state.caches))
+    h = rmsnorm(p["final_norm"], x, cfg.rms_eps)
+    return _last_logits(p, cfg, h), state._replace(caches=caches)
+
+
+def _hybrid_prefill(p, cfg: ArchConfig, x, b, max_seq):
+    n_groups, per_group, trailing = _hybrid_layout(cfg)
+    state = init_caches(cfg, b, max_seq)
+    grouped_p = jax.tree.map(
+        lambda a: a[: n_groups * per_group].reshape(
+            (n_groups, per_group) + a.shape[1:]), p["ssm_layers"])
+    grouped_c = jax.tree.map(
+        lambda a: a[: n_groups * per_group].reshape(
+            (n_groups, per_group) + a.shape[1:]), state.caches)
+    shared = p["shared_attn"]
+    s = x.shape[1]
+
+    def ssm_one(x, inp):
+        layer_p, cache = inp
+        h = rmsnorm(layer_p["pre_norm"], x, cfg.rms_eps)
+        y, new_cache = ssm_mod.ssm_prefill(layer_p["ssm"], cfg, h, cache)
+        return x + y, new_cache
+
+    def group(x, inp):
+        gp, gc, ac = inp
+        x, gc = jax.lax.scan(ssm_one, x, (gp, gc))
+        h = rmsnorm(shared["pre_norm"], x, cfg.rms_eps)
+        a, (k, v) = attn_mod.gqa_train(shared["attn"], cfg, h)
+        ac = attn_mod.cache_update(
+            ac._replace(length=jnp.zeros((), jnp.int32)), k, v, 0)
+        x = x + a
+        h2 = rmsnorm(shared["post_norm"], x, cfg.rms_eps)
+        from repro.models.layers import mlp
+        x = x + mlp(shared["mlp"], h2)
+        return x, (gc, ac)
+
+    x, (gcs, acs) = jax.lax.scan(group, x, (grouped_p, grouped_c,
+                                            state.attn_caches))
+    new_ssm = jax.tree.map(
+        lambda a: a.reshape((n_groups * per_group,) + a.shape[2:]), gcs)
+    if trailing:
+        tail_p = jax.tree.map(lambda a: a[n_groups * per_group:],
+                              p["ssm_layers"])
+        tail_c = jax.tree.map(lambda a: a[n_groups * per_group:],
+                              state.caches)
+        x, tail_c = jax.lax.scan(ssm_one, x, (tail_p, tail_c))
+        new_ssm = jax.tree.map(
+            lambda a, t: jnp.concatenate([a, t], axis=0), new_ssm, tail_c)
+    h = rmsnorm(p["final_norm"], x, cfg.rms_eps)
+    return _last_logits(p, cfg, h), ServeState(
+        caches=new_ssm, cross_kv=None, attn_caches=acs)
+
+
+def _last_logits(p, cfg: ArchConfig, h):
+    table = (p["embed"]["table"] if cfg.tie_embeddings
+             else p["unembed"]["table"])
+    last = h[:, -1, :]
+    logits = jnp.einsum("bd,vd->bv", last.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return maybe_shard(logits, "dp", "tp")

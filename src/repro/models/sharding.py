@@ -1,0 +1,62 @@
+"""Mesh-aware sharding helpers.
+
+All model code expresses shardings with LOGICAL axis names ("dp" = batch
+axes, "tp" = tensor axis); `maybe_shard` resolves them against whatever
+mesh is in context (1-device CPU tests -> no-op; 16x16 pod -> data/model;
+2x16x16 multi-pod -> pod+data/model).  This keeps the same model code
+runnable from unit tests to the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical -> candidate mesh axis names (first ones present in the mesh win)
+LOGICAL = {
+    "dp": ("pod", "data"),  # batch-parallel axes
+    "tp": ("model",),  # tensor/expert-parallel axis
+    "sp": ("model",),  # sequence axis in context-parallel layouts
+}
+
+
+def resolve_spec(*logical_axes) -> P:
+    """Map logical axis names to a PartitionSpec for the current mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return P()
+    present = set(mesh.axis_names)
+    out = []
+    for ax in logical_axes:
+        if ax is None:
+            out.append(None)
+            continue
+        names = tuple(n for n in LOGICAL.get(ax, (ax,)) if n in present)
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def maybe_shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint if a mesh is in context, else identity."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve_spec(*logical_axes))
+
+
+def shardable(dim: int, logical: str) -> bool:
+    """True if `dim` divides evenly over the mesh extent of the logical
+    axis (used to decide e.g. whether KV heads can be tensor-sharded)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty:
+        return False
+    ext = 1
+    present = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    for n in LOGICAL.get(logical, (logical,)):
+        if n in present:
+            ext *= present[n]
+    return ext > 0 and dim % ext == 0

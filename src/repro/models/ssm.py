@@ -1,0 +1,257 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked parallel training
+form and O(1)-state decode, plus the depthwise causal conv frontend.
+
+Shapes follow the Mamba2 paper: d_inner = expand * d_model, heads of size
+`headdim` (nheads = d_inner / headdim), scalar-identity A per head, one
+B/C group shared across heads (n = ssm_state).
+
+Training uses the chunked SSD algorithm: intra-chunk dual (attention-like)
+term + inter-chunk state recurrence via a scan over chunk states —
+O(S * chunk) instead of O(S^2), which is what makes the ``long_500k``
+shape feasible for SSM/hybrid archs (sub-quadratic).
+
+TP layout: the [z|x] projection is ONE matrix with the z/x boundary at
+d_inner (a shard boundary whenever d_inner % tp == 0), so both halves
+shard cleanly over "tp"; the small B/C/dt projection stays replicated.
+The recurrent state is (batch, heads, headdim, n), heads sharded — decode
+memory is independent of context length (the long_500k story).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+from repro.models.sharding import maybe_shard
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    return d_in, nheads, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, nheads, n = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_zx": dense_init(ks[0], (d, 2 * d_in)),  # [z | x], tp-sharded
+        "w_bcdt": dense_init(ks[1], (d, 2 * n + nheads)),  # small, replicated
+        "conv_w_x": jax.random.normal(ks[3], (cfg.ssm_conv, d_in),
+                                      jnp.float32) * 0.1,
+        "conv_b_x": jnp.zeros((d_in,), jnp.float32),
+        "conv_w_bc": jax.random.normal(
+            jax.random.fold_in(ks[3], 1), (cfg.ssm_conv, 2 * n),
+            jnp.float32) * 0.1,
+        "conv_b_bc": jnp.zeros((2 * n,), jnp.float32),
+        "a_log": jnp.zeros((nheads,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "norm": init_rmsnorm(d_in),
+        "w_out": dense_init(ks[2], (d_in, d)),
+    }
+
+
+def _segsum(x):
+    """(..., l) -> (..., l, l) lower-triangular inclusive segment sums:
+    out[..., i, j] = sum_{j < m <= i} x[..., m]  (NEG_INF above diag)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j, i]
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xh, a_dt, b_mat, c_mat, chunk: int):
+    """Chunked SSD scan.
+
+    xh:   (b, s, h, p)  inputs already scaled by dt
+    a_dt: (b, s, h)     log-decay per step (A * dt, negative)
+    b_mat/c_mat: (b, s, n)  single group shared across heads
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:  # zero-padding is exact: decay exp(0)=1, x=0 adds nothing
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    c = s_pad // l
+    xc = xh.reshape(b, c, l, h, p)
+    ac = a_dt.reshape(b, c, l, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    bc = b_mat.reshape(b, c, l, n)
+    cc = c_mat.reshape(b, c, l, n)
+
+    a_cs = jnp.cumsum(ac, axis=-1)  # (b,h,c,l)
+
+    # 1. intra-chunk (dual / attention-like) term
+    decay = jnp.exp(_segsum(ac))  # (b,h,c,l,l), lower-tri
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, decay, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (scan over chunk axis)
+    chunk_decay = jnp.exp(a_cs[..., -1])  # (b,h,c)
+
+    def step(hprev, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), xh.dtype)
+    hfinal, hprevs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = hprevs.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(a_cs)  # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s_pad, h, p)[:, :s]
+    return y, hfinal
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (b, h, p, n)
+    conv_x: jax.Array  # (b, conv-1, d_in) trailing x inputs (pre-conv)
+    conv_bc: jax.Array  # (b, conv-1, 2n)
+    length: jax.Array  # () int32
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int) -> SSMCache:
+    d_in, nheads, n = _dims(cfg)
+    return SSMCache(
+        state=maybe_shard(
+            jnp.zeros((batch, nheads, cfg.ssm_headdim, n), jnp.float32),
+            "dp", "tp", None, None),
+        conv_x=maybe_shard(
+            jnp.zeros((batch, cfg.ssm_conv - 1, d_in), jnp.bfloat16),
+            "dp", None, "tp"),
+        conv_bc=jnp.zeros((batch, cfg.ssm_conv - 1, 2 * n), jnp.bfloat16),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_proj(p, cfg: ArchConfig, x):
+    """Returns z, x_part (both tp-sharded), bc, dt_raw (replicated)."""
+    d_in, nheads, n = _dims(cfg)
+    zx = jnp.einsum("bsd,de->bse", x, p["w_zx"].astype(x.dtype))
+    zx = maybe_shard(zx, "dp", None, "tp")
+    z, x_part = zx[..., :d_in], zx[..., d_in:]
+    bcdt = jnp.einsum("bsd,de->bse", x, p["w_bcdt"].astype(x.dtype))
+    bc = bcdt[..., : 2 * n]
+    dt_raw = bcdt[..., 2 * n:]
+    return z, x_part, bc, dt_raw
+
+
+def _conv_train(w, b, u):
+    """Depthwise causal conv over the sequence (kernel K)."""
+    wt = w.astype(u.dtype)
+    k = wt.shape[0]
+    padded = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(padded[:, i: i + u.shape[1], :] * wt[i] for i in range(k))
+    return jax.nn.silu(out + b.astype(u.dtype))
+
+
+def _ssd_from_parts(p, cfg, x_conv, bc_conv, dt_raw, want_state=False):
+    d_in, nheads, n = _dims(cfg)
+    b, s, _ = x_conv.shape
+    b_mat = bc_conv[..., :n].astype(jnp.float32)
+    c_mat = bc_conv[..., n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,s,h)
+    a = -jnp.exp(p["a_log"])  # (h,)
+    xh = x_conv.reshape(b, s, nheads, cfg.ssm_headdim).astype(jnp.float32)
+    xh = maybe_shard(xh, "dp", None, "tp", None)
+    y, hfinal = _ssd_chunked(xh * dt[..., None], a * dt, b_mat, c_mat,
+                             cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    return y.reshape(b, s, d_in), hfinal
+
+
+def _gate_out(p, cfg, y, z, dtype):
+    y = rmsnorm(p["norm"], y.astype(dtype) * jax.nn.silu(z), cfg.rms_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dtype))
+
+
+def ssm_train(p, cfg: ArchConfig, x):
+    """x: (b, s, d) -> (b, s, d) with the chunked SSD scan."""
+    z, x_part, bc, dt_raw = _split_proj(p, cfg, x)
+    x_conv = _conv_train(p["conv_w_x"], p["conv_b_x"], x_part)
+    bc_conv = _conv_train(p["conv_w_bc"], p["conv_b_bc"], bc)
+    y, _ = _ssd_from_parts(p, cfg, x_conv, bc_conv, dt_raw)
+    return _gate_out(p, cfg, y, z, x.dtype)
+
+
+def ssm_prefill(p, cfg: ArchConfig, x, cache: SSMCache):
+    """Like ssm_train but also returns the post-prompt recurrent state and
+    conv trailing windows, so decode can continue from the prompt."""
+    z, x_part, bc, dt_raw = _split_proj(p, cfg, x)
+    x_conv = _conv_train(p["conv_w_x"], p["conv_b_x"], x_part)
+    bc_conv = _conv_train(p["conv_w_bc"], p["conv_b_bc"], bc)
+    y, hfinal = _ssd_from_parts(p, cfg, x_conv, bc_conv, dt_raw)
+    out = _gate_out(p, cfg, y, z, x.dtype)
+    k = cfg.ssm_conv - 1
+    new_cache = SSMCache(
+        state=hfinal,
+        conv_x=x_part[:, -k:, :].astype(jnp.bfloat16),
+        conv_bc=bc[:, -k:, :].astype(jnp.bfloat16),
+        length=cache.length + x.shape[1])
+    return out, new_cache
+
+
+def ssm_decode(p, cfg: ArchConfig, x, cache: SSMCache):
+    """Single-token step: x (b, 1, d); O(1) in context length."""
+    d_in, nheads, n = _dims(cfg)
+    b = x.shape[0]
+    dt_ = x.dtype
+    z, x_part, bc, dt_raw = _split_proj(p, cfg, x)
+
+    def conv_step(w, bias, window, new):
+        cat = jnp.concatenate([window.astype(dt_), new], axis=1)  # (b,K,ch)
+        out = jnp.sum(cat * w.astype(dt_)[None], axis=1, keepdims=True)
+        return jax.nn.silu(out + bias.astype(dt_)), cat[:, 1:, :]
+
+    x_conv, new_win_x = conv_step(p["conv_w_x"], p["conv_b_x"],
+                                  cache.conv_x, x_part)
+    bc_conv, new_win_bc = conv_step(p["conv_w_bc"], p["conv_b_bc"],
+                                    cache.conv_bc, bc)
+
+    b_vec = bc_conv[:, 0, :n].astype(jnp.float32)
+    c_vec = bc_conv[:, 0, n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(a * dt)  # (b,h)
+    xh = x_conv[:, 0].reshape(b, nheads, cfg.ssm_headdim).astype(jnp.float32)
+    state = cache.state * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh * dt[..., None], b_vec)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec) \
+        + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in)
+    out = _gate_out(p, cfg, y, z, dt_)
+    return out, SSMCache(state=state, conv_x=new_win_x.astype(jnp.bfloat16),
+                         conv_bc=new_win_bc.astype(jnp.bfloat16),
+                         length=cache.length + 1)
+
+
+def ssm_reference_scan(p, cfg: ArchConfig, x):
+    """Sequential (step-by-step) oracle for tests: runs ssm_decode over
+    the sequence.  O(S) steps — small inputs only."""
+    b, s, d = x.shape
+    cache = init_ssm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = ssm_decode(p, cfg, x[:, t: t + 1, :], cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

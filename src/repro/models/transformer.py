@@ -1,0 +1,212 @@
+"""Decoder stacks: dense / MoE / SSM / hybrid blocks with scan-over-layers.
+
+Scan keeps the HLO O(1) in depth (DeepSeek's 60 layers compile the same
+program as 1), which bounds XLA compile time at 512-device scale.  Layer
+params are stacked along a leading axis via vmapped init.
+
+Hybrid (Zamba2-style): SSM layers scanned in groups of (attn_every - 1),
+with ONE weight-shared attention+MLP block applied between groups.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from repro.models.sharding import maybe_shard
+
+
+# --------------------------------------------------------------------------
+# Single blocks
+# --------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {
+            "pre_norm": init_rmsnorm(cfg.d_model),
+            "ssm": ssm_mod.init_ssm(ks[0], cfg),
+        }
+    p = {
+        "pre_norm": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_attention(ks[0], cfg),
+        "post_norm": init_rmsnorm(cfg.d_model),
+    }
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    if kind == "cross":  # decoder layer with cross attention (whisper)
+        p["cross"] = init_cross_attention(ks[2], cfg)
+        p["cross_norm"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def block_train(p, cfg: ArchConfig, x, kind: str, cross: jax.Array | None = None):
+    """One residual block; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = rmsnorm(p["pre_norm"], x, cfg.rms_eps)
+        return x + ssm_mod.ssm_train(p["ssm"], cfg, h), aux
+    h = rmsnorm(p["pre_norm"], x, cfg.rms_eps)
+    if cfg.use_mla:
+        a, _ = attn.mla_train(p["attn"], cfg, h)
+    else:
+        a, _ = attn.gqa_train(p["attn"], cfg, h)
+    x = x + a
+    if cross is not None:
+        h = rmsnorm(p["cross_norm"], x, cfg.rms_eps)
+        c = _cross_attention(p["cross"], cfg, h, cross)
+        x = x + c
+    h = rmsnorm(p["post_norm"], x, cfg.rms_eps)
+    if kind == "moe":
+        f, aux = moe_mod.moe_ffn(p["moe"], cfg, h)
+    else:
+        f = mlp(p["mlp"], h)
+    return x + f, aux
+
+
+def block_decode(p, cfg: ArchConfig, x, kind: str, cache,
+                 cross_kv=None):
+    if kind == "ssm":
+        h = rmsnorm(p["pre_norm"], x, cfg.rms_eps)
+        o, cache = ssm_mod.ssm_decode(p["ssm"], cfg, h, cache)
+        return x + o, cache
+    h = rmsnorm(p["pre_norm"], x, cfg.rms_eps)
+    if cfg.use_mla:
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache)
+    x = x + a
+    if cross_kv is not None:
+        h = rmsnorm(p["cross_norm"], x, cfg.rms_eps)
+        x = x + _cross_attention_cached(p["cross"], cfg, h, cross_kv)
+    h = rmsnorm(p["post_norm"], x, cfg.rms_eps)
+    if kind == "moe":
+        f, _ = moe_mod.moe_ffn(p["moe"], cfg, h)
+    else:
+        f = mlp(p["mlp"], h)
+    return x + f, cache
+
+
+# --------------------------------------------------------------------------
+# Cross attention (whisper enc-dec)
+# --------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ArchConfig):
+    from repro.models.layers import dense_init
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, h * hd)),
+        "wv": dense_init(ks[2], (d, h * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+
+
+def _cross_attention(p, cfg: ArchConfig, x, enc_out):
+    dt = x.dtype
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", enc_out,
+                   p["wk"].astype(dt)).reshape(b, se, h, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out,
+                   p["wv"].astype(dt)).reshape(b, se, h, hd)
+    out = attn._dense_attention(q, k, v, causal=False, q_offset=0)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+
+
+def _cross_attention_cached(p, cfg: ArchConfig, x, cross_kv):
+    k, v = cross_kv
+    dt = x.dtype
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(b, s, h, hd)
+    out = attn._dense_attention(q, k.astype(dt), v.astype(dt), causal=False,
+                                q_offset=0)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+
+
+def precompute_cross_kv(p, cfg: ArchConfig, enc_out):
+    dt = enc_out.dtype
+    b, se, _ = enc_out.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out,
+                   p["wk"].astype(dt)).reshape(b, se, h, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out,
+                   p["wv"].astype(dt)).reshape(b, se, h, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Stacks (scan over stacked layer params)
+# --------------------------------------------------------------------------
+
+def init_stack(key, cfg: ArchConfig, kind: str, num_layers: int):
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+
+
+def stack_train(params, cfg: ArchConfig, x, kind: str, remat: bool = True,
+                cross: jax.Array | None = None):
+    """Scan x through stacked layers; accumulates MoE aux losses."""
+
+    def one(x, layer_p):
+        out, aux = block_train(layer_p, cfg, x, kind, cross=cross)
+        out = maybe_shard(out, "dp", None, None)
+        return out, aux
+
+    if remat and cfg.remat_policy == "full":
+        one = jax.checkpoint(one)
+    elif remat and cfg.remat_policy == "dots":
+        one = jax.checkpoint(
+            one, policy=jax.checkpoint_policies.checkpoint_dots)
+    x, auxs = jax.lax.scan(one, x, params)
+    return x, jnp.sum(auxs)
+
+
+def _index_tree(tree_, i):
+    return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+        a, i, axis=0, keepdims=False), tree_)
+
+
+def _update_tree(full, new, i):
+    return jax.tree.map(
+        lambda f, n: jax.lax.dynamic_update_index_in_dim(f, n, i, axis=0),
+        full, new)
+
+
+def stack_decode(params, cfg: ArchConfig, x, kind: str, caches,
+                 cross_kv=None):
+    """Step a single token through stacked layers.
+
+    Uses fori_loop with the FULL stacked cache in the CARRY, updated via
+    dynamic_update_slice — XLA aliases carry DUS in place, so the
+    multi-GB serving cache is single-buffered.  (The natural scan with
+    caches as xs/ys double-buffers: xs are read-only inputs and ys fresh
+    outputs — measured +10.7 GB/device on qwen1.5-32b decode_32k.)
+    cross_kv, if given, is stacked per-layer (whisper)."""
+    num_layers = jax.tree.leaves(params)[0].shape[0]
+
+    def body(i, carry):
+        x, caches_full = carry
+        layer_p = _index_tree(params, i)
+        cache_i = _index_tree(caches_full, i)
+        ckv = _index_tree(cross_kv, i) if cross_kv is not None else None
+        out, new_cache = block_decode(layer_p, cfg, x, kind, cache_i,
+                                      cross_kv=ckv)
+        return out, _update_tree(caches_full, new_cache, i)
+
+    x, caches = jax.lax.fori_loop(0, num_layers, body, (x, caches))
+    return x, caches

@@ -1,0 +1,108 @@
+"""Fault tolerance & elasticity utilities.
+
+At 1000+ nodes the failure model is: a host dies every few hours, slow
+hosts (stragglers) are constant, and whole-pod preemptions happen.  The
+mitigations implemented here (and where they live):
+
+  * checkpoint/restart      — train/checkpoint.py (atomic, verified,
+                              fallback-to-older); the loop in
+                              launch/train.py saves every N steps and
+                              auto-resumes from the newest valid step.
+  * deterministic data      — data/pipeline.py keys batches by
+                              (seed, step): restart replays nothing.
+  * elastic re-mesh         — `elastic_mesh` below rebuilds the largest
+                              usable (data, model) mesh from surviving
+                              devices; params re-shard on restore because
+                              checkpoints are sharding-agnostic numpy.
+  * straggler mitigation    — SPED's walker estimates are valid for ANY
+                              subset of walkers (unbiasedness is
+                              per-walker; see core/walks.py), so the
+                              natural policy is deadline-based: psum what
+                              arrived, scale by the live fraction.
+                              `straggler_scale` implements the reweight.
+                              For LM training the equivalent is backup
+                              workers + the synchronous update simply
+                              proceeding on the quorum's pmean.
+  * retry with backoff      — `retrying` wraps host-side steps (I/O,
+                              compile) which are the usual flaky layer.
+"""
+from __future__ import annotations
+
+import logging
+import math
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+
+def elastic_mesh(devices: Sequence | None = None, model_axis: int = 16,
+                 pod_size: int = 256):
+    """Build the largest (pod, data, model) mesh from surviving devices.
+
+    Keeps the model axis fixed (param sharding must divide) and absorbs
+    losses into the data axis: losing hosts shrinks global batch, not the
+    model.  Returns (mesh, dropped_devices)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    model = math.gcd(model_axis, n)
+    usable_pods = max(1, n // pod_size)
+    per_pod = (n // usable_pods // model) * model
+    usable = usable_pods * per_pod
+    dropped = devices[usable:]
+    devs = np.array(devices[:usable]).reshape(
+        usable_pods, per_pod // model, model)
+    from jax.sharding import Mesh
+    axes = ("pod", "data", "model")
+    return Mesh(devs, axes), dropped
+
+
+def straggler_scale(contributions_arrived: jax.Array,
+                    total_workers: int) -> jax.Array:
+    """Reweight a psum of partial (masked) contributions so the estimate
+    stays unbiased when stragglers are dropped at the deadline:
+    scale = total / arrived  (arrived > 0)."""
+    import jax.numpy as jnp
+    arrived = jnp.maximum(contributions_arrived, 1)
+    return jnp.asarray(total_workers, jnp.float32) / arrived
+
+
+def retrying(fn: Callable, attempts: int = 3, base_delay: float = 0.5,
+             retry_on: tuple = (IOError, OSError, ValueError)):
+    """Host-side retry wrapper with exponential backoff."""
+
+    def wrapped(*args, **kwargs):
+        for i in range(attempts):
+            try:
+                return fn(*args, **kwargs)
+            except retry_on as e:
+                if i == attempts - 1:
+                    raise
+                delay = base_delay * (2 ** i)
+                log.warning("attempt %d/%d failed (%s); retrying in %.1fs",
+                            i + 1, attempts, e, delay)
+                time.sleep(delay)
+
+    return wrapped
+
+
+class HeartbeatMonitor:
+    """Tracks per-host step timestamps; hosts silent past `timeout_s` are
+    declared dead, triggering elastic_mesh + restore in the driver loop.
+    (Host liveness transport — e.g. a KV store — is deployment-specific;
+    this class encapsulates the policy so the driver stays simple.)"""
+
+    def __init__(self, num_hosts: int, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self.last_seen = {h: time.time() for h in range(num_hosts)}
+
+    def beat(self, host: int):
+        self.last_seen[host] = time.time()
+
+    def dead_hosts(self) -> list[int]:
+        now = time.time()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]

@@ -1,0 +1,134 @@
+"""AdamW optimizer with production trimmings, no external deps:
+
+  * global-norm gradient clipping
+  * cosine schedule with linear warmup
+  * ZeRO-1: first/second moments sharded over the data axis (param
+    shards stay whole; moments are what dominate optimizer HBM)
+  * optional gradient COMPRESSION with error feedback (int8 quantization
+    of the DP all-reduce payload; the residual is carried to the next
+    step).  At 1000+ node scale the DP all-reduce is the binding
+    cross-pod collective; 4x payload shrink is the classic mitigation.
+
+Pure pytree functions; state is a pytree so the checkpoint manager and
+pjit shard it like everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import maybe_shard, resolve_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False  # int8 + error feedback on the DP payload
+    zero1: bool = True  # shard moments over "dp"
+    # moment storage dtype: bf16 halves optimizer HBM (math stays f32);
+    # the classic fit-lever for >100B models on small pods
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moments
+    nu: Any  # second moments
+    error: Any  # compression error-feedback residual (zeros if unused)
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def _moment_like(p, zero1: bool, dtype):
+    z = jnp.zeros(p.shape, dtype)
+    if zero1 and p.ndim >= 1:
+        # shard the leading dim over the data axis where possible
+        return maybe_shard(z, "dp")
+    return z
+
+
+def init(cfg: OptConfig, params) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    mu = jax.tree.map(lambda p: _moment_like(p, cfg.zero1, mdt), params)
+    nu = jax.tree.map(lambda p: _moment_like(p, cfg.zero1, mdt), params)
+    err = jax.tree.map(jnp.zeros_like, params) if cfg.compress_grads else None
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu, error=err)
+
+
+def _quantize_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g, err):
+    """Error-feedback int8 round trip: returns (g_hat, new_err) where
+    g_hat is what the (compressed) all-reduce would deliver and new_err
+    carries the quantization residual to the next step."""
+    target = g + err
+    q, scale = _quantize_int8(target)
+    g_hat = q.astype(g.dtype) * scale
+    return g_hat, target - g_hat
+
+
+def apply(cfg: OptConfig, state: OptState, params, grads):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_decompress, grads, state.error)
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_err = state.error
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu,
+                                error=new_err), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+train step (loss + grads) and a prefill+decode round trip on CPU,
+asserting output shapes and no NaNs.  Full configs are exercised only by
+the dry-run (launch/dryrun.py), never allocated here."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, smoke_config
+from repro.models import model as model_lib
+from repro.models.frontends import synthetic_frontend
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def make_batch(cfg, batch=2, seq=24, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    batch_d = {"tokens": toks,
+               "labels": jnp.roll(toks, -1, axis=1)}
+    batch_d.update(synthetic_frontend(jax.random.fold_in(key, 7), cfg, batch))
+    return batch_d
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    return {}
+
+
+def get_params(cfg, params_cache):
+    if cfg.name not in params_cache:
+        params_cache[cfg.name] = model_lib.init(jax.random.PRNGKey(1), cfg)
+    return params_cache[cfg.name]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, params_cache):
+    cfg = smoke_config(get_arch(arch))
+    p = get_params(cfg, params_cache)
+    batch = make_batch(cfg)
+
+    def loss_fn(p):
+        loss, metrics = model_lib.train_loss(p, cfg, batch)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(p)
+    assert np.isfinite(float(loss)), f"{arch}: loss {loss}"
+    # rough sanity: early loss near ln(vocab)
+    assert 0.0 < float(loss) < 2 * np.log(cfg.vocab_size) + 1
+    flat, _ = jax.tree.flatten(grads)
+    for g in flat:
+        assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch, params_cache):
+    cfg = smoke_config(get_arch(arch))
+    p = get_params(cfg, params_cache)
+    b, s = 2, 16
+    batch = make_batch(cfg, batch=b, seq=s)
+    logits, state = model_lib.prefill(p, cfg, batch, max_seq=s + 4)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill NaN"
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for _ in range(2):
+        logits, state = model_lib.decode_step(p, cfg, state, tok)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: decode NaN"
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-1.2b"])
+def test_prefill_matches_decode_ssm(arch, params_cache):
+    """Chunked SSD prefill then decode == decoding every token from
+    scratch (state handoff correctness)."""
+    cfg = smoke_config(get_arch(arch))
+    p = get_params(cfg, params_cache)
+    b, s = 1, 8
+    batch = make_batch(cfg, batch=b, seq=s, key=jax.random.PRNGKey(3))
+    toks = batch["tokens"]
+    # path A: prefill all s tokens, logits for last position
+    logits_a, _ = model_lib.prefill(p, cfg, batch, max_seq=s + 2)
+    # path B: decode token by token
+    state = model_lib.init_caches(cfg, b, s + 2)
+    for t in range(s):
+        logits_b, state = model_lib.decode_step(p, cfg, state,
+                                                toks[:, t: t + 1])
+    # bf16 residual stream + different (mathematically equal) association
+    # orders of the SSD recurrence -> a few % drift is expected
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), rtol=6e-2, atol=6e-2)
+    # (exact state-handoff equality is asserted in f32 by
+    # test_models_unit.py::test_ssd_chunked_matches_sequential_oracle;
+    # here the bf16 residual stream may flip near-tied argmaxes)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "granite-moe-1b-a400m",
+                                  "deepseek-v2-236b"])
+def test_prefill_matches_decode_attn(arch, params_cache):
+    cfg = smoke_config(get_arch(arch))
+    p = get_params(cfg, params_cache)
+    b, s = 1, 8
+    batch = make_batch(cfg, batch=b, seq=s, key=jax.random.PRNGKey(4))
+    toks = batch["tokens"]
+    logits_a, _ = model_lib.prefill(p, cfg, batch, max_seq=s + 2)
+    state = model_lib.init_caches(cfg, b, s + 2)
+    for t in range(s):
+        logits_b, state = model_lib.decode_step(p, cfg, state,
+                                                toks[:, t: t + 1])
+    # bf16 residual stream: absorbed-MLA decode and expanded-MLA prefill
+    # are algebraically identical (verified in f32 unit test) but round
+    # differently
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), rtol=6e-2, atol=6e-2)
+    assert np.array_equal(np.argmax(logits_a, -1), np.argmax(logits_b, -1))
+
+
+def test_mla_absorbed_decode_matches_train_f32():
+    """MLA weight-absorption algebra: decode == train attention in f32."""
+    from repro.models import attention as attn_mod
+    cfg = smoke_config(get_arch("deepseek-v2-236b"))
+    key = jax.random.PRNGKey(0)
+    p = attn_mod.init_attention(key, cfg)
+    b, s = 1, 6
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, s, cfg.d_model), jnp.float32) * 0.1
+    out_train, _ = attn_mod.mla_train(p, cfg, x)
+    cache = attn_mod.init_mla_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        o, cache = attn_mod.mla_decode(p, cfg, x[:, t: t + 1], cache)
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_train, out_dec, rtol=1e-2, atol=5e-3)
+
+
+def test_all_archs_param_counts_plausible():
+    """Full configs' analytic param counts are in the advertised ballpark."""
+    expect = {
+        "qwen1.5-32b": (28e9, 40e9),
+        "qwen3-4b": (3e9, 5e9),
+        "starcoder2-15b": (12e9, 18e9),
+        "minitron-8b": (7e9, 10.5e9),
+        "whisper-small": (0.15e9, 0.5e9),
+        "zamba2-1.2b": (1.0e9, 1.7e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.8e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "llava-next-mistral-7b": (6e9, 8.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_smaller():
+    cfg = get_arch("deepseek-v2-236b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()

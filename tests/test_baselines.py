@@ -1,0 +1,69 @@
+"""Related-work baselines (paper App. B): Bethe Hessian, shift-and-invert,
+Lanczos reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, graphs, laplacian_dense, metrics
+from repro.core.kmeans import cluster_agreement
+
+
+def test_bethe_hessian_recovers_sbm_communities():
+    g, truth = graphs.sbm_graph(180, 3, p_in=0.25, p_out=0.01, seed=0)
+    labels, info = baselines.bethe_hessian_cluster(g, 3)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 3))
+    assert acc > 0.9, acc
+    assert info["negative_eigs"] >= 3  # one per community (Saade et al.)
+
+
+def test_cg_solves_spd_system():
+    key = jax.random.PRNGKey(0)
+    n = 40
+    a = jax.random.normal(key, (n, n))
+    a = a @ a.T + n * jnp.eye(n)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, 3))
+    x = baselines.cg_solve(lambda v: a @ v, b, iters=80)
+    np.testing.assert_allclose(a @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def test_shift_invert_operator_finds_bottom_eigvec():
+    from repro.core import SolverConfig, run_solver
+    g, _ = graphs.ring_of_cliques(3, 6)
+    L = laplacian_dense(g)
+    k = 3
+    _, v_star = metrics.ground_truth_bottom_k(L, k)
+    op = baselines.shift_invert_operator(lambda v: L @ v, shift=0.05,
+                                         cg_iters=40)
+    cfg = SolverConfig(method="oja", lr=0.5, steps=200, eval_every=25, k=k)
+    _, tr = run_solver(op, g.num_nodes, cfg, v_star=v_star)
+    assert float(tr.subspace_error[-1]) < 1e-2
+
+
+def test_lanczos_matches_eigh():
+    g, _ = graphs.clique_graph(120, 3, seed=1)
+    L = laplacian_dense(g)
+    lam_ref = jnp.linalg.eigvalsh(L)[:4]
+    lam, vecs = baselines.lanczos_bottom_k(lambda v: L @ v, g.num_nodes, 4,
+                                           iters=110)
+    np.testing.assert_allclose(lam, lam_ref, rtol=1e-3, atol=1e-3)
+    # eigenvector residuals
+    res = jnp.linalg.norm(L @ vecs - vecs * lam[None, :], axis=0)
+    assert float(jnp.max(res)) < 1e-2
+
+
+def test_lanczos_as_ground_truth_for_sped():
+    """Large-graph protocol: Lanczos oracle replaces dense eigh."""
+    from repro.core import (SolverConfig, limit_neg_exp, run_solver,
+                            spectral_radius_upper_bound)
+    from repro.core import operators
+    g, _ = graphs.clique_graph(300, 3, seed=2)
+    L = laplacian_dense(g)
+    k = 3
+    _, v_star = baselines.lanczos_bottom_k(lambda v: L @ v, g.num_nodes, k)
+    s = limit_neg_exp(151)
+    op = operators.series_operator(s, operators.dense_matvec(L))
+    cfg = SolverConfig(method="mu_eg", lr=0.4, steps=500, eval_every=100,
+                       k=k)
+    _, tr = run_solver(op, g.num_nodes, cfg, v_star=v_star)
+    assert float(tr.subspace_error[-1]) < 0.02

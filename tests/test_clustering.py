@@ -1,0 +1,71 @@
+"""End-to-end spectral clustering + link prediction (paper Secs. 5, A.1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClusteringConfig, SolverConfig, spectral_cluster
+from repro.core import graphs
+from repro.core.kmeans import cluster_agreement, kmeans
+
+
+def test_kmeans_separates_blobs():
+    key = jax.random.PRNGKey(0)
+    centers = jnp.asarray([[0.0, 0.0], [5.0, 5.0], [-5.0, 5.0]])
+    pts = jnp.concatenate([
+        centers[i] + 0.3 * jax.random.normal(jax.random.fold_in(key, i), (40, 2))
+        for i in range(3)
+    ])
+    truth = jnp.repeat(jnp.arange(3), 40)
+    res = kmeans(key, pts, 3)
+    assert float(cluster_agreement(res.labels, truth, 3)) > 0.99
+
+
+@pytest.mark.parametrize("transform", ["limit_neg_exp", "cheb_log"])
+def test_spectral_cluster_recovers_cliques(transform):
+    g, truth = graphs.clique_graph(160, 4, seed=3)
+    cfg = ClusteringConfig(
+        num_clusters=4, transform=transform, degree=64 if transform ==
+        "cheb_log" else 251,
+        solver=SolverConfig(method="mu_eg", lr=0.4, steps=600, eval_every=100),
+        seed=0)
+    labels, info = spectral_cluster(g, cfg)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 4))
+    assert acc > 0.95, f"{transform}: accuracy {acc}"
+
+
+def test_spectral_cluster_minibatch_stochastic():
+    g, truth = graphs.clique_graph(120, 3, seed=4)
+    cfg = ClusteringConfig(
+        num_clusters=3, transform="limit_neg_exp", degree=51,
+        estimation="minibatch", batch_edges=512,
+        solver=SolverConfig(method="mu_eg", lr=0.1, steps=1500, eval_every=250),
+        seed=0)
+    labels, _ = spectral_cluster(g, cfg)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 3))
+    assert acc > 0.9, f"stochastic accuracy {acc}"
+
+
+def test_weighted_graph_clustering_linkpred():
+    """Paper App. A.1: clustering survives probabilistic edge completion."""
+    from repro.core import linkpred
+    g, truth = graphs.clique_graph(120, 3, seed=5)
+    g_completed = linkpred.complete_graph(g, drop_prob=0.2, seed=6)
+    assert float(jnp.min(g_completed.weight)) >= 0.0
+    cfg = ClusteringConfig(
+        num_clusters=3, transform="limit_neg_exp", degree=101,
+        solver=SolverConfig(method="mu_eg", lr=0.4, steps=800, eval_every=100),
+        seed=0)
+    labels, _ = spectral_cluster(g_completed, cfg)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 3))
+    assert acc > 0.9, f"linkpred accuracy {acc}"
+
+
+def test_exact_reference_pipeline():
+    from repro.core import exact_cluster_reference
+    g, truth = graphs.clique_graph(100, 4, seed=7)
+    labels = exact_cluster_reference(g, 4)
+    acc = float(cluster_agreement(labels, jnp.asarray(truth), 4))
+    assert acc > 0.95

@@ -1,0 +1,80 @@
+"""Unit tests for the dry-run's HLO analysis tooling (parser correctness
+matters: the roofline's collective term comes from it)."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (_loop_multipliers, _shape_bytes,
+                                        _split_computations,
+                                        collective_bytes,
+                                        cpu_dot_upcast_bytes)
+
+HLO = """\
+HloModule jit_step, entry_computation_layout={()->()}
+
+%wrapped_convert_computation (param_0: bf16[64,512,512]) -> f32[64,512,512] {
+  %param_0 = bf16[64,512,512]{2,1,0} parameter(0)
+  ROOT %convert.1 = f32[64,512,512]{2,1,0} convert(%param_0)
+}
+
+%region_body (param: (s32[], f32[16,512])) -> (s32[], f32[16,512]) {
+  %param = (s32[], f32[16,512]{1,0}) parameter(0)
+  %ar = f32[16,512]{1,0} all-reduce(%gte), replica_groups={}
+  %inner = (s32[], f32[8,8]{1,0}) while(%t2), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %tup = (s32[], f32[16,512]{1,0}) tuple(%iv, %ar)
+}
+
+%inner_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %ag = f32[8,8]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%i, %ag)
+}
+
+%inner_cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(4)
+  ROOT %cmp = pred[] compare(%i2, %c), direction=LT
+}
+
+%region_cond (paramc: (s32[], f32[16,512])) -> pred[] {
+  %c10 = s32[] constant(10)
+  ROOT %cmp2 = pred[] compare(%ivc, %c10), direction=LT
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %w = (s32[], f32[16,512]{1,0}) while(%t0), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"10"}}
+  %top = f32[4,4]{1,0} all-reduce(%a), replica_groups={}
+  ROOT %r = f32[4,4]{1,0} copy(%top)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,512]") == 16 * 512 * 4
+    assert _shape_bytes("bf16[8,8]") == 128
+    assert _shape_bytes("(f32[2,2], s8[4])") == 20
+
+
+def test_split_computations():
+    comps = _split_computations(HLO)
+    assert {"wrapped_convert_computation", "region_body", "inner_body",
+            "inner_cond", "region_cond", "main"} <= set(comps)
+
+
+def test_loop_multipliers_nested():
+    comps = _split_computations(HLO)
+    m = _loop_multipliers(comps)
+    assert m["main"] == 1
+    assert m["region_body"] == 10  # known_trip_count
+    assert m["inner_body"] == 40  # nested: 10 * 4
+
+
+def test_collective_bytes_loop_aware():
+    got = collective_bytes(HLO)
+    # top-level AR: 4*4*4 = 64 B; loop AR: 16*512*4 * 10; nested AG:
+    # 8*8*4 * 40
+    assert got["bytes"]["all-reduce"] == 64 + 16 * 512 * 4 * 10
+    assert got["bytes"]["all-gather"] == 8 * 8 * 4 * 40
+    assert got["count"]["all-reduce"] == 11
+
+
+def test_cpu_dot_upcast_bytes():
+    assert cpu_dot_upcast_bytes(HLO) == 64 * 512 * 512 * 4

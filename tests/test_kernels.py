@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Shape/dtype sweeps + hypothesis property tests per kernel, as required:
+every kernel asserts allclose against its ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.edge_spmm import ops as es_ops, ref as es_ref
+from repro.kernels.eg_update import ops as eg_ops, ref as eg_ref
+from repro.kernels.laplacian_poly import ops as lp_ops, ref as lp_ref
+
+I = dict(interpret=True)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# --- laplacian_poly --------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 256, 300, 512])
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_poly_step_shapes(n, k):
+    l_mat = rand(0, (n, n))
+    l_mat = l_mat + l_mat.T
+    u = rand(1, (n, k))
+    got = lp_ops.poly_step(l_mat, u, 0.02, **I)
+    want = lp_ref.poly_step(l_mat, u, 0.02)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_poly_step_dtypes(dtype):
+    n, k = 256, 4
+    l_mat = rand(2, (n, n), dtype)
+    u = rand(3, (n, k), dtype)
+    got = lp_ops.poly_step(l_mat, u, 0.1, **I)
+    want = lp_ref.poly_step(l_mat.astype(jnp.float32), u.astype(jnp.float32), 0.1)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_limit_series_apply_matches_series_module():
+    """Kernel path == core.series recurrence == eigh oracle."""
+    from repro.core import limit_neg_exp
+    n, k, deg = 256, 3, 11
+    l_mat = rand(4, (n, n))
+    l_mat = (l_mat + l_mat.T) / 20
+    v = rand(5, (n, k))
+    got = lp_ops.limit_series_apply(l_mat, v, degree=deg, **I)
+    want = limit_neg_exp(deg).apply(lambda u: l_mat @ u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=8, deadline=None)
+def test_poly_step_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 64)) * 8
+    k = int(rng.integers(1, 6))
+    c = float(rng.uniform(-0.5, 0.5))
+    l_mat = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    got = lp_ops.poly_step(l_mat, u, c, block=128, **I)
+    want = lp_ref.poly_step(l_mat, u, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# --- edge_spmm -------------------------------------------------------------
+
+@pytest.mark.parametrize("e", [64, 128, 200, 512])
+@pytest.mark.parametrize("n,k", [(50, 2), (256, 8), (300, 5)])
+def test_edge_spmm_shapes(e, n, k):
+    key = jax.random.PRNGKey(e * 7 + n)
+    src = jax.random.randint(key, (e,), 0, n)
+    dst = jax.random.randint(jax.random.fold_in(key, 1), (e,), 0, n)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (e,))
+    v = rand(6, (n, k))
+    got = es_ops.edge_spmm(src, dst, w, v, **I)
+    want = es_ref.edge_spmm(src, dst, w, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_edge_spmm_equals_laplacian_on_full_edge_set():
+    """Full-batch edge_spmm == dense Laplacian matvec (paper L = X^T W X)."""
+    from repro.core import graphs, laplacian_dense
+    g, _ = graphs.ring_of_cliques(3, 6)
+    v = rand(7, (g.num_nodes, 4))
+    got = es_ops.edge_spmm(g.src, g.dst, g.weight, v, **I)
+    want = laplacian_dense(g) @ v
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=8, deadline=None)
+def test_edge_spmm_property(seed):
+    rng = np.random.default_rng(seed)
+    e = int(rng.integers(1, 300))
+    n = int(rng.integers(4, 200))
+    k = int(rng.integers(1, 9))
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 2, e), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    got = es_ops.edge_spmm(src, dst, w, v, **I)
+    want = es_ref.edge_spmm(src, dst, w, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# --- eg_update -------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 512, 700])
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_eg_update_shapes(n, k):
+    v = rand(8, (n, k))
+    v = v / jnp.linalg.norm(v, axis=0, keepdims=True)
+    av = rand(9, (n, k))
+    got = eg_ops.mu_eg_update(v, av, 0.05, **I)
+    want = eg_ref.mu_eg_update(v, av, 0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_eg_update_matches_solver_step():
+    """Fused kernel == solvers.mu_eg_step (the training loop's oracle)."""
+    from repro.core.solvers import SolverState, mu_eg_step
+    n, k = 384, 5
+    v = rand(10, (n, k))
+    v = v / jnp.linalg.norm(v, axis=0, keepdims=True)
+    av = rand(11, (n, k))
+    st_ = SolverState(v=v, step=jnp.zeros((), jnp.int32))
+    want = mu_eg_step(st_, av, 0.03).v
+    got = eg_ops.mu_eg_update(v, av, 0.03, **I)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=6, deadline=None)
+def test_eg_update_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 80)) * 8
+    k = int(rng.integers(1, 7))
+    lr = float(rng.uniform(0.001, 0.3))
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    v = v / jnp.linalg.norm(v, axis=0, keepdims=True)
+    av = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    got = eg_ops.mu_eg_update(v, av, lr, block_n=128, **I)
+    want = eg_ref.mu_eg_update(v, av, lr)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_eg_update_preserves_unit_norm():
+    n, k = 256, 6
+    v = rand(12, (n, k))
+    v = v / jnp.linalg.norm(v, axis=0, keepdims=True)
+    av = rand(13, (n, k))
+    out = eg_ops.mu_eg_update(v, av, 0.1, **I)
+    np.testing.assert_allclose(jnp.linalg.norm(out, axis=0), 1.0, atol=1e-5)

@@ -1,0 +1,151 @@
+"""Laplacian / incidence identities (paper Sec. 2, Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EdgeList, adjacency_dense, build_edge_incidence, degrees,
+    edge_inner_product, incidence_matrix, laplacian_dense,
+    laplacian_matvec, make_edge_list, minibatch_laplacian_matvec,
+    normalized_laplacian_dense, spectral_radius_upper_bound,
+)
+from repro.core import graphs
+
+
+def random_graph(seed, n=12, p=0.4):
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, k=1)
+    mask = rng.random(len(iu[0])) < p
+    edges = np.stack([iu[0][mask], iu[1][mask]], axis=1)
+    if len(edges) == 0:
+        edges = np.array([[0, 1]])
+    w = rng.uniform(0.1, 2.0, size=len(edges))
+    return make_edge_list(edges, n, weights=w)
+
+
+def test_laplacian_equals_incidence_gram():
+    g, _ = graphs.ring_of_cliques(3, 5)
+    X = incidence_matrix(g)
+    L = laplacian_dense(g)
+    np.testing.assert_allclose(L, X.T @ X, atol=1e-5)
+
+
+def test_weighted_laplacian_equals_xtwx():
+    g = random_graph(0)
+    X = incidence_matrix(g)
+    L = laplacian_dense(g)
+    np.testing.assert_allclose(L, X.T @ (g.weight[:, None] * X), atol=1e-5)
+
+
+def test_ones_is_nullvector():
+    g, _ = graphs.ring_of_cliques(4, 4)
+    L = laplacian_dense(g)
+    np.testing.assert_allclose(L @ jnp.ones(g.num_nodes), 0.0, atol=1e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_matvec_matches_dense(seed):
+    g = random_graph(seed)
+    L = laplacian_dense(g)
+    v = np.random.default_rng(seed + 1).normal(size=(g.num_nodes, 3)).astype(np.float32)
+    np.testing.assert_allclose(laplacian_matvec(g, jnp.asarray(v)), L @ v,
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_laplacian_psd_and_symmetric(seed):
+    g = random_graph(seed)
+    L = np.asarray(laplacian_dense(g))
+    np.testing.assert_allclose(L, L.T, atol=1e-6)
+    lam = np.linalg.eigvalsh(L)
+    assert lam.min() > -1e-4
+    # spectral radius upper bound (paper Sec. 5.4): lam_max <= 2 deg*
+    assert lam.max() <= float(spectral_radius_upper_bound(g)) + 1e-4
+
+
+def test_minibatch_matvec_unbiased():
+    g, _ = graphs.ring_of_cliques(3, 5)
+    L = laplacian_dense(g)
+    v = jax.random.normal(jax.random.PRNGKey(0), (g.num_nodes, 2))
+    exact = L @ v
+    total = jnp.zeros_like(v)
+    trials = 600
+    for t in range(trials):
+        key = jax.random.PRNGKey(t + 1)
+        sel = jax.random.randint(key, (8,), 0, g.num_edges)
+        total = total + minibatch_laplacian_matvec(
+            g.src[sel], g.dst[sel], g.weight[sel], v, g.num_edges)
+    err = jnp.linalg.norm(total / trials - exact) / jnp.linalg.norm(exact)
+    assert float(err) < 0.15  # ~1/sqrt(600*8/E) Monte-Carlo tolerance
+
+
+# --- Table 1: inner products of edge vectors ------------------------------
+
+def test_table1_disconnected():
+    assert float(edge_inner_product(0, 1, 2, 3)) == 0.0
+
+
+def test_table1_serial():
+    # i -> j -> l with i<j<l: edges (i,j),(j,l) share j at opposite signs
+    assert float(edge_inner_product(0, 1, 1, 2)) == -1.0
+
+
+def test_table1_converging():
+    # i -> j <- l: edges (i,j),(l,j) share j at same sign (-1,-1)
+    assert float(edge_inner_product(0, 2, 1, 2)) == 1.0
+
+
+def test_table1_diverging():
+    # i <- j -> l: edges (j,i)... canonical (min,max): (0,1),(0,2) share 0
+    assert float(edge_inner_product(0, 1, 0, 2)) == 1.0
+
+
+def test_table1_repeated():
+    assert float(edge_inner_product(3, 7, 3, 7)) == 2.0
+
+
+def test_incidence_graph_matches_inner_products():
+    g, _ = graphs.ring_of_cliques(3, 4)
+    inc = build_edge_incidence(g)
+    X = np.asarray(incidence_matrix(g))
+    gram = X @ X.T  # (E, E) inner products
+    E = g.num_edges
+    for e in range(E):
+        d = int(inc.deg[e])
+        nbrs = np.asarray(inc.nbrs[e, :d])
+        # neighbours = exactly the nonzero entries of gram row e
+        expected = set(np.nonzero(gram[e])[0].tolist())
+        assert set(nbrs.tolist()) == expected
+        np.testing.assert_allclose(np.asarray(inc.ip[e, :d]), gram[e, nbrs])
+        # degree bound of paper Sec 4.3: deg_inc <= 2 deg* - 1... (+1 self)
+        assert d <= inc.deg_star_inc + 1
+
+
+def test_normalized_laplacian_spectrum_bounded():
+    g, _ = graphs.ring_of_cliques(4, 5)
+    Ln = np.asarray(normalized_laplacian_dense(g))
+    lam = np.linalg.eigvalsh(Ln)
+    assert lam.min() > -1e-5 and lam.max() < 2.0 + 1e-5
+
+
+def test_three_room_mdp_structure():
+    g, labels = graphs.three_room_mdp(s=1, h=10)
+    h, w = 11, 31
+    assert g.num_nodes == h * w
+    assert set(np.unique(np.asarray(labels))) == {0, 1, 2}
+    # connected: nullspace of L is 1-dim
+    L = np.asarray(laplacian_dense(g))
+    lam = np.linalg.eigvalsh(L)
+    assert lam[0] < 1e-5 and lam[1] > 1e-6  # connected => single zero eig
+
+
+def test_clique_graph_ground_truth_separation():
+    g, labels = graphs.clique_graph(120, 3, seed=1)
+    L = np.asarray(laplacian_dense(g))
+    lam = np.linalg.eigvalsh(L)
+    # 3 clusters => 3 eigenvalues << bulk (paper Sec. 2.1)
+    assert lam[2] < 0.2 * lam[3]

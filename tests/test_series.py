@@ -1,0 +1,126 @@
+"""Spectrum-transform series (paper Sec. 4.2, Table 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cheb_log, cheb_neg_exp, identity_series, laplacian_dense, limit_neg_exp,
+    taylor_log, taylor_neg_exp, with_lambda_star,
+)
+from repro.core import graphs
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    g, _ = graphs.ring_of_cliques(3, 6)
+    return g, laplacian_dense(g)
+
+
+def eig_apply(series, L, V):
+    """Oracle: apply the series' scalar map through eigendecomposition."""
+    lam, vecs = jnp.linalg.eigh(L)
+    return (vecs * series.scalar(lam)[None, :]) @ (vecs.T @ V)
+
+
+SERIES = [
+    limit_neg_exp(51),
+    limit_neg_exp(251),
+    taylor_neg_exp(11),
+    taylor_log(31, eps=0.05),
+    cheb_neg_exp(32, rho=30.0),
+    cheb_log(32, rho=30.0),
+]
+
+
+@pytest.mark.parametrize("s", SERIES, ids=lambda s: s.name)
+def test_apply_matches_scalar_map(small_graph, s):
+    """matrix-free apply == scalar map through eigh (eigenvector preserving)."""
+    g, L = small_graph
+    V = jax.random.normal(jax.random.PRNGKey(0), (g.num_nodes, 3))
+    got = s.apply(lambda u: L @ u, V)
+    want = eig_apply(s, L, V)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=5e-4)
+
+
+def test_limit_series_converges_to_exp():
+    lam = jnp.linspace(0.0, 10.0, 50)
+    for d, tol in [(51, 0.5), (251, 0.12)]:
+        err = jnp.max(jnp.abs(limit_neg_exp(d).scalar(lam) - (-jnp.exp(-lam))))
+        assert float(err) < tol
+
+
+def test_limit_series_monotone_everywhere():
+    """Odd-degree limit series is monotone increasing on ALL of R (the
+    property that makes it the paper's most robust series, Fig. 6)."""
+    lam = jnp.linspace(-5.0, 600.0, 2001)
+    f = limit_neg_exp(251).scalar(lam)
+    assert bool(jnp.all(jnp.diff(f) >= -1e-5 * jnp.maximum(jnp.abs(f[1:]), 1.0)))
+
+
+def test_taylor_log_matches_log_within_radius():
+    """Convergent for spectrum within (0, 2-eps) (paper Sec. 5.3 caveat)."""
+    lam = jnp.linspace(0.2, 1.7, 40)
+    s = taylor_log(101, eps=0.05)
+    err = jnp.max(jnp.abs(s.scalar(lam) - jnp.log(lam + 0.05)))
+    assert float(err) < 1e-2
+
+
+def test_taylor_log_diverges_outside_radius():
+    lam = jnp.asarray(4.0)  # |lam - (1-eps)| > 1 -> divergence
+    s = taylor_log(101, eps=0.05)
+    val = float(jnp.abs(s.scalar(lam)))
+    assert (val > 1e3) or np.isnan(val)
+
+
+def test_chebyshev_beats_taylor_at_same_degree():
+    """Beyond-paper claim: cheb needs far lower degree than Taylor."""
+    rho = 30.0
+    lam = jnp.linspace(0.0, rho, 200)
+    target = -jnp.exp(-lam)
+    cheb_err = jnp.max(jnp.abs(cheb_neg_exp(16, rho=rho).scalar(lam) - target))
+    taylor_err = jnp.max(jnp.abs(taylor_neg_exp(17).scalar(lam) - target))
+    assert float(cheb_err) < 1e-2
+    assert float(cheb_err) < float(taylor_err) * 1e-2
+
+
+def test_reversal_turns_bottom_into_top(small_graph):
+    """Eq. (8): ordering of reversed transformed spectrum is flipped."""
+    g, L = small_graph
+    lam = jnp.linalg.eigvalsh(L)
+    for s in [limit_neg_exp(51), with_lambda_star(identity_series(), float(lam[-1]) * 1.01)]:
+        rev = s.reversed_scalar(lam)  # lam ascending -> rev must descend
+        assert bool(jnp.all(jnp.diff(rev) <= 1e-5))
+
+
+@given(st.integers(1, 100), st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_limit_series_dilates_bottom_gaps(seed, frac):
+    """Property: for spectra with lam_bottom << rho, the limit series
+    improves the convergence ratio rho_range / gap (paper Sec. 3)."""
+    rng = np.random.default_rng(seed)
+    bottom = np.sort(rng.uniform(0.0, 1.0, size=4))
+    bulk = rng.uniform(20.0, 40.0, size=8)
+    lam = jnp.asarray(np.sort(np.concatenate([bottom, bulk])), jnp.float32)
+    s = limit_neg_exp(251, scale=float(frac * 8.0 / lam[-1]))
+    f = jnp.sort(s.scalar(lam))
+    gap_before = (lam[1] - lam[0]) / (lam[-1] - lam[0])
+    gap_after = (f[1] - f[0]) / (f[-1] - f[0])
+    assert float(gap_after) >= float(gap_before) * 0.99
+
+
+def test_stochastic_apply_uses_independent_keys():
+    """apply_stochastic folds a distinct key into every inner matvec."""
+    seen = []
+
+    def keyed_mv(key, u):
+        seen.append(key)
+        return u
+
+    s = limit_neg_exp(5)
+    v = jnp.ones((4, 2))
+    # trace eagerly (no jit) so the hook records traced keys
+    s.apply_stochastic(keyed_mv, jax.random.PRNGKey(0), v)
+    assert len(seen) == 1  # fori_loop traces once; key is fold_in(i) inside

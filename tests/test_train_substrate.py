@@ -1,0 +1,179 @@
+"""Optimizer / checkpoint / data-pipeline / fault-tolerance tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import EdgePipeline, TokenPipeline
+from repro.train import checkpoint as ckpt
+from repro.train import fault
+from repro.train import optimizer as opt
+
+
+def quadratic_params():
+    return {"w": jnp.asarray([2.0, -3.0, 1.0]), "b": jnp.asarray(0.5)}
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = opt.OptConfig(lr=0.05, warmup_steps=5, total_steps=400,
+                        weight_decay=0.0, clip_norm=10.0)
+    params = quadratic_params()
+    state = opt.init(cfg, params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(400):
+        g = jax.grad(loss_fn)(params)
+        params, state, m = opt.apply(cfg, state, params, g)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_grad_compression_error_feedback_converges():
+    """int8 + error feedback must still drive the loss down (the error
+    residual guarantees the long-run average update is unbiased)."""
+    cfg = opt.OptConfig(lr=0.05, warmup_steps=0, total_steps=600,
+                        weight_decay=0.0, compress_grads=True)
+    params = quadratic_params()
+    state = opt.init(cfg, params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(600):
+        g = jax.grad(loss_fn)(params)
+        params, state, _ = opt.apply(cfg, state, params, g)
+    assert float(loss_fn(params)) < 5e-3
+
+
+def test_compression_roundtrip_residual():
+    g = jnp.asarray([1.0, -0.5, 0.001])
+    err = jnp.zeros(3)
+    g_hat, new_err = opt.compress_decompress(g, err)
+    np.testing.assert_allclose(g_hat + new_err, g, atol=1e-6)
+
+
+def test_schedule_shape():
+    cfg = opt.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(opt.schedule(cfg, 0)) == 0.0
+    assert abs(float(opt.schedule(cfg, 10)) - 1.0) < 1e-6
+    assert float(opt.schedule(cfg, 100)) <= cfg.min_lr_frac + 1e-6
+
+
+# --- checkpointing ---------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, tree, extra={"cursor": 7})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = ckpt.restore(d, like)
+    assert extra["cursor"] == 7
+    np.testing.assert_allclose(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_keeps_last(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.zeros(2)}
+    for s in range(5):
+        ckpt.save(d, s, tree, keep_last=2)
+    steps = sorted(os.listdir(d))
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.arange(8).astype(jnp.float32)}
+    path = ckpt.save(d, 1, tree)
+    # flip a byte in the array payload
+    fn = os.path.join(path, "arr_00000.npy")
+    raw = bytearray(open(fn, "rb").read())
+    raw[-1] ^= 0xFF
+    open(fn, "wb").write(bytes(raw))
+    with pytest.raises(IOError):
+        ckpt.restore(d, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_restore_with_fallback_skips_corrupt(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.arange(4).astype(jnp.float32)}
+    ckpt.save(d, 1, {"x": tree["x"] * 1}, keep_last=5)
+    path2 = ckpt.save(d, 2, {"x": tree["x"] * 2}, keep_last=5)
+    fn = os.path.join(path2, "arr_00000.npy")
+    raw = bytearray(open(fn, "rb").read())
+    raw[-1] ^= 0xFF
+    open(fn, "wb").write(bytes(raw))
+    restored, _, step = ckpt.restore_with_fallback(
+        d, jax.tree.map(jnp.zeros_like, tree))
+    assert step == 1  # fell back past the corrupt step 2
+    np.testing.assert_allclose(restored["x"], tree["x"])
+
+
+# --- data pipeline ----------------------------------------------------------
+
+def test_token_pipeline_deterministic_and_shardable():
+    pipe = TokenPipeline(vocab_size=100, global_batch=8, seq_len=16, seed=3)
+    b1 = pipe.batch_at(10)
+    b2 = pipe.batch_at(10)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(pipe.batch_at(11)["tokens"], b1["tokens"])
+    # shard determinism: same (seed, step, shard) -> same rows
+    s0 = pipe.shard_batch_at(10, 0, 4)
+    s0b = pipe.shard_batch_at(10, 0, 4)
+    np.testing.assert_array_equal(s0["tokens"], s0b["tokens"])
+    assert s0["tokens"].shape == (2, 16)
+
+
+def test_edge_pipeline_unbiased_mean():
+    from repro.core import graphs, laplacian_dense
+    g, _ = graphs.ring_of_cliques(3, 5)
+    pipe = EdgePipeline(graph=g, batch_edges=64, seed=0)
+    batches = [pipe.batch_at(t) for t in range(200)]
+    # mean minibatch laplacian ~ true laplacian
+    from repro.core import minibatch_laplacian_matvec
+    v = jax.random.normal(jax.random.PRNGKey(0), (g.num_nodes, 2))
+    acc = jnp.zeros_like(v)
+    for b in batches:
+        acc = acc + minibatch_laplacian_matvec(
+            b["src"], b["dst"], b["weight"], v, b["num_edges_total"])
+    want = laplacian_dense(g) @ v
+    rel = jnp.linalg.norm(acc / len(batches) - want) / jnp.linalg.norm(want)
+    assert float(rel) < 0.1
+
+
+# --- fault tolerance --------------------------------------------------------
+
+def test_elastic_mesh_single_device():
+    mesh, dropped = fault.elastic_mesh(model_axis=16)
+    assert mesh.shape["model"] == 1  # gcd(16, 1)
+    assert not dropped
+
+
+def test_straggler_scale():
+    s = fault.straggler_scale(jnp.asarray(3), 4)
+    assert float(s) == pytest.approx(4 / 3)
+
+
+def test_retrying_eventually_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert fault.retrying(flaky, attempts=5, base_delay=0.01)() == "ok"
+
+
+def test_heartbeat_monitor():
+    hb = fault.HeartbeatMonitor(num_hosts=3, timeout_s=0.0)
+    import time
+    time.sleep(0.01)
+    hb.beat(1)
+    dead = hb.dead_hosts()
+    assert 0 in dead and 2 in dead and 1 not in dead or 1 in dead

@@ -1,0 +1,92 @@
+"""Random-walk estimator of Laplacian powers (paper Sec. 4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_edge_incidence, laplacian_dense
+from repro.core import graphs, walks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, _ = graphs.ring_of_cliques(3, 4)
+    inc = build_edge_incidence(g)
+    L = np.asarray(laplacian_dense(g))
+    return g, inc, L
+
+
+@pytest.mark.parametrize("power", [1, 2, 3])
+def test_importance_estimator_unbiased(setup, power):
+    g, inc, L = setup
+    wb = walks.sample_walks(jax.random.PRNGKey(0), inc, 120_000, 3)
+    est = np.asarray(walks.estimate_power_dense(wb, g, inc, power, g.num_nodes))
+    want = np.linalg.matrix_power(L, power)
+    rel = np.linalg.norm(est - want) / np.linalg.norm(want)
+    assert rel < 0.05, f"L^{power} rel err {rel}"
+
+
+@pytest.mark.parametrize("power", [1, 2])
+def test_rejection_estimator_unbiased(setup, power):
+    """The paper-faithful Eq. 14 rejection scheme (higher variance)."""
+    g, inc, L = setup
+    wb = walks.sample_walks(jax.random.PRNGKey(1), inc, 200_000, 3)
+    est = np.asarray(walks.estimate_power_dense(
+        wb, g, inc, power, g.num_nodes, mode="rejection",
+        key=jax.random.PRNGKey(2)))
+    want = np.linalg.matrix_power(L, power)
+    rel = np.linalg.norm(est - want) / np.linalg.norm(want)
+    assert rel < 0.35, f"L^{power} rel err {rel}"
+
+
+def test_importance_lower_variance_than_rejection(setup):
+    """Beyond-paper claim: HT weighting Rao-Blackwellizes the accept coin."""
+    g, inc, L = setup
+    want = L @ L
+    errs = {}
+    for mode in ["importance", "rejection"]:
+        sq = 0.0
+        for t in range(6):
+            wb = walks.sample_walks(jax.random.PRNGKey(10 + t), inc, 20_000, 2)
+            est = np.asarray(walks.estimate_power_dense(
+                wb, g, inc, 2, g.num_nodes, mode=mode,
+                key=jax.random.PRNGKey(100 + t)))
+            sq += np.sum((est - want) ** 2)
+        errs[mode] = sq
+    assert errs["importance"] < errs["rejection"]
+
+
+def test_walk_probabilities_are_proper(setup):
+    g, inc, _ = setup
+    wb = walks.sample_walks(jax.random.PRNGKey(3), inc, 1000, 3)
+    # log p decreasing along the walk, bounded by p_min (Eq. 14)
+    assert bool(jnp.all(wb.logp[:, 1] <= wb.logp[:, 0] + 1e-6))
+    log_pmin = -2 * np.log(inc.deg_star_inc) - np.log(g.num_edges)
+    assert bool(jnp.all(wb.logp[:, 1] >= log_pmin - 1e-5))
+
+
+def test_alpha_values_follow_table1(setup):
+    """alpha factors are products of {+-1, 2} inner products — all walks
+    on the incidence graph have nonzero alpha."""
+    g, inc, _ = setup
+    wb = walks.sample_walks(jax.random.PRNGKey(4), inc, 5000, 3)
+    assert bool(jnp.all(wb.alpha != 0.0))
+    # one-step alphas must be exactly +-1 or 2
+    a1 = np.asarray(wb.alpha[:, 1])
+    assert set(np.unique(a1)).issubset({-1.0, 1.0, 2.0})
+
+
+def test_walk_operator_converges_in_solver(setup):
+    """End-to-end: walk-estimated low-degree operator drives mu-EG to the
+    bottom eigenvectors."""
+    from repro.core import SolverConfig, metrics, run_solver
+    g, inc, L = setup
+    rho = float(2 * jnp.max(jnp.asarray(L).diagonal()))
+    coeffs = walks.lowdeg_negexp_coeffs(4, rho, tau=6.0 / rho)
+    op = walks.walk_polynomial_operator(g, inc, coeffs, 0.0, num_walkers=4096)
+    k = 3
+    _, v_star = metrics.ground_truth_bottom_k(jnp.asarray(L), k)
+    cfg = SolverConfig(method="mu_eg", lr=0.05, steps=600, eval_every=50,
+                       k=k, seed=0)
+    _, tr = run_solver(op, g.num_nodes, cfg, v_star=v_star, stochastic=True)
+    assert float(tr.subspace_error[-1]) < 0.05
