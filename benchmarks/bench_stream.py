@@ -1,0 +1,104 @@
+"""Streaming service benchmarks: graph-store update throughput and
+iterations-to-reconverge (warm + dilation vs cold) on a >=10k-node SBM.
+
+The headline claim mirrors the streaming-graph-challenge observation
+composed with SPED: after a 1% edge perturbation, warm-starting the
+previous eigenvector panel against the dilated operator reconverges in
+>= 3x fewer solver iterations than a cold solve (in practice far more).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import graphs, make_edge_list, operators
+from repro.core.laplacian import spectral_radius_upper_bound
+from repro.core.series import limit_neg_exp
+from repro.stream import graph_store as gs
+from repro.stream import warm
+
+N_NODES = 10_000
+N_BLOCKS = 10
+K = 8
+DEGREE = 15
+STRENGTH = 8.0
+BATCH = 256
+
+
+def _dilated_op(g):
+    rho = float(spectral_radius_upper_bound(g))
+    s = limit_neg_exp(DEGREE, scale=STRENGTH / rho)
+    return operators.series_operator(s, operators.edge_matvec(g))
+
+
+def _perturb_one_percent(g, seed=1):
+    """Delete E/200 random edges and insert E/200 random new ones —
+    1% of the edge set churned."""
+    rng = np.random.default_rng(seed)
+    e = g.num_edges
+    m = max(e // 200, 1)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    keep = np.ones(e, bool)
+    keep[rng.choice(e, size=m, replace=False)] = False
+    add = np.sort(
+        rng.integers(0, g.num_nodes, size=(m, 2)).astype(np.int32), axis=1)
+    add = add[add[:, 0] != add[:, 1]]
+    edges = np.concatenate(
+        [np.stack([src[keep], dst[keep]], 1), add], axis=0)
+    edges = np.unique(edges, axis=0)
+    return make_edge_list(edges, g.num_nodes), 2 * m
+
+
+def run():
+    rows = []
+    g, _ = graphs.sparse_sbm_graph(
+        N_NODES, N_BLOCKS, avg_degree_in=10.0, avg_degree_out=1.0, seed=0)
+    e = g.num_edges
+
+    # -- graph store: batched update throughput --------------------------
+    store = gs.from_edge_list(g)
+    rng = np.random.default_rng(0)
+    sel = rng.choice(e, size=BATCH, replace=False)
+    pairs = np.stack([np.asarray(g.src)[sel], np.asarray(g.dst)[sel]], 1)
+    batch = gs.make_edge_batch(pairs, rng.random(BATCH).astype(np.float32))
+    us = time_call(
+        lambda s, b: gs.apply_edge_batch(s, b)[0].weight, store, batch)
+    rows.append((
+        f"stream/apply_edge_batch_b{BATCH}_cap{store.capacity}", us,
+        f"updates_per_s={BATCH / us * 1e6:.0f}"))
+
+    # -- cold solve to tolerance -----------------------------------------
+    cfg = warm.WarmConfig(tol=5e-3, chunk=10, max_steps=5000, lr=0.3)
+    op = _dilated_op(g)
+    key = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    state, cold = warm.reconverge(key, op, g.num_nodes, K, cfg, v_prev=None)
+    cold_wall = time.perf_counter() - t0
+    rows.append((
+        f"stream/cold_solve_n{N_NODES}_e{e}", cold_wall * 1e6,
+        f"iters={cold['iterations']};residual={cold['residual']:.1e}"))
+
+    # -- warm + dilation reconverge after 1% churn -----------------------
+    g2, churned = _perturb_one_percent(g)
+    op2 = _dilated_op(g2)
+    t0 = time.perf_counter()
+    _, winfo = warm.reconverge(key, op2, g.num_nodes, K, cfg,
+                               v_prev=state.v)
+    warm_wall = time.perf_counter() - t0
+    speedup = cold["iterations"] / max(winfo["iterations"], cfg.chunk)
+    rows.append((
+        f"stream/warm_reconverge_churn{churned}", warm_wall * 1e6,
+        f"iters={winfo['iterations']};warm={winfo['warm']};"
+        f"iter_speedup={speedup:.1f}x"))
+    assert winfo["residual"] <= cfg.tol
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

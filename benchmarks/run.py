@@ -8,8 +8,9 @@ import sys
 def main() -> None:
     from benchmarks import (bench_baselines, bench_cliques, bench_kernels,
                             bench_linkpred, bench_mdp, bench_series_degree,
-                            bench_transforms, bench_walks)
+                            bench_stream, bench_transforms, bench_walks)
     mods = [
+        ("stream", bench_stream),
         ("table2", bench_transforms),
         ("fig2_3", bench_mdp),
         ("fig4", bench_cliques),

@@ -1,0 +1,93 @@
+"""Streaming graph clustering with warm-started SPED sessions.
+
+Walkthrough of the stream subsystem: admit several SBM graphs into a
+multi-tenant StreamingService, tick them to convergence through ONE
+compiled batched step, stream edge updates at them (small ones ride the
+first-order incremental eigen-update path; heavy rewires trigger the
+drift fallback into a warm re-solve), and read back cluster labels whose
+ids stay stable across re-solves.
+
+Run:  PYTHONPATH=src python examples/streaming_clustering.py
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import graphs
+from repro.core.kmeans import cluster_agreement
+from repro.stream import ServiceConfig, StreamingService
+
+NUM_GRAPHS = 4
+N, BLOCKS = 240, 4
+
+
+def main() -> None:
+    svc = StreamingService(ServiceConfig(
+        k=6, num_clusters=BLOCKS, degree=9, steps_per_tick=25,
+        lr=0.3, tol=5e-3, dilation_strength=6.0))
+
+    print(f"== admitting {NUM_GRAPHS} SBM graphs (n={N}, {BLOCKS} blocks)")
+    truth = {}
+    for i in range(NUM_GRAPHS):
+        g, labels = graphs.sbm_graph(N, BLOCKS, p_in=0.25, p_out=0.01,
+                                     seed=i)
+        sid = f"tenant-{i}"
+        svc.add_graph(sid, g, num_clusters=BLOCKS, edge_capacity=8192)
+        truth[sid] = labels
+        print(f"   {sid}: {g.num_edges} edges")
+
+    ticks = svc.run_until_converged(max_ticks=200)
+    status = "converged" if svc.all_converged else "NOT converged"
+    print(f"== {status} in {ticks} ticks, "
+          f"{svc.compile_count} compiled step program(s)")
+    for sid, labels in truth.items():
+        acc = float(cluster_agreement(
+            jnp.asarray(svc.labels(sid)), jnp.asarray(labels), BLOCKS))
+        info = svc.session_info(sid)
+        print(f"   {sid}: residual={info['residual']:.1e} "
+              f"agreement={acc:.2f}")
+
+    # ---- a small update: first-order incremental path ------------------
+    sid = "tenant-0"
+    before = svc.labels(sid)
+    print("== small update (2 reweighted edges) ->", end=" ")
+    src, dst, _ = svc.live_edges(sid)
+    svc.apply_updates(sid, np.stack([src[:2], dst[:2]], 1), [1.5, 0.75],
+                      mode="set")
+    info = svc.session_info(sid)
+    path = "incremental" if info["converged"] else "re-solve"
+    print(f"{path} (fallbacks={info['fallbacks']})")
+
+    # ---- a heavy rewire: drift fallback -> warm re-solve ---------------
+    print("== heavy update (25% of edges deleted) ->", end=" ")
+    src, dst, _ = svc.live_edges(sid)
+    rng = np.random.default_rng(0)
+    sel = rng.choice(len(src), size=len(src) // 4, replace=False)
+    svc.apply_updates(sid, np.stack([src[sel], dst[sel]], 1),
+                      np.zeros(len(sel)), mode="set")
+    info = svc.session_info(sid)
+    print(f"fallback={info['fallbacks'] == 1}, warm re-solve queued")
+    t0 = info["ticks"]
+    svc.run_until_converged(max_ticks=200)
+    info = svc.session_info(sid)
+    after = svc.labels(sid)
+    stable = float(np.mean(np.asarray(before) == np.asarray(after)))
+    print(f"   warm re-solve reconverged in {info['ticks'] - t0} ticks "
+          f"(the thinned graph has smaller eigengaps than at admission, "
+          f"so this is the hard case; benchmarks/bench_stream.py shows "
+          f"the 1%-churn case at >=3x fewer iterations); stable label "
+          f"ids for {stable:.0%} of nodes; compiled programs still "
+          f"{svc.compile_count}")
+
+    print("== evicting converged sessions")
+    done = svc.evict_converged()
+    for sid, summary in done.items():
+        print(f"   {sid}: ticks={summary['ticks']} "
+              f"solves={summary['solves']} "
+              f"incremental={summary['incremental_updates']} "
+              f"fallbacks={summary['fallbacks']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast CI lane: everything except the `slow`-marked system/train suites.
+# Full tier-1 verify remains `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

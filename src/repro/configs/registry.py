@@ -67,8 +67,13 @@ def smoke_config(cfg: ArchConfig) -> ArchConfig:
         repl["num_kv_heads"] = min(cfg.num_kv_heads, 2) if cfg.num_kv_heads \
             < cfg.num_heads else 4
     if cfg.family == "moe":
+        # capacity_factor 4.0 makes the smoke capacity non-binding (worst
+        # case: every token routes its top-k to one expert), so the
+        # prefill==decode round-trip tests compare the same computation;
+        # production capacity behavior is exercised by the dry-run.
         repl.update(num_experts=8, moe_top_k=2, moe_d_ff=64,
-                    num_shared_experts=min(cfg.num_shared_experts, 1))
+                    num_shared_experts=min(cfg.num_shared_experts, 1),
+                    capacity_factor=4.0)
     if cfg.use_mla:
         repl.update(kv_lora_rank=32, qk_rope_head_dim=16, v_head_dim=32)
     if cfg.ssm_state:

@@ -7,11 +7,13 @@ from repro.core.laplacian import (  # noqa: F401
     build_edge_incidence,
     degrees,
     edge_inner_product,
+    edge_matvec_arrays,
     incidence_matrix,
     laplacian_dense,
     laplacian_matvec,
     make_edge_list,
     minibatch_laplacian_matvec,
+    pad_edge_list,
     normalized_laplacian_dense,
     spectral_radius_upper_bound,
 )
@@ -30,6 +32,7 @@ from repro.core.solvers import (  # noqa: F401
     SolverConfig,
     SolverState,
     Trace,
+    init_from_panel,
     init_state,
     mu_eg_step,
     oja_step,

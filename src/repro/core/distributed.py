@@ -25,28 +25,22 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
+
+from repro.core import laplacian as lap_mod
 from repro.core.laplacian import EdgeIncidence, EdgeList
 from repro.core.series import SpectralSeries
 from repro.core import walks as walks_mod
 
 
 def pad_edges_for_mesh(g: EdgeList, num_shards: int) -> EdgeList:
-    """Pad the edge list with zero-weight self-loop-free dummy edges so it
-    divides evenly across shards (zero weight => no contribution)."""
+    """Pad with inert zero-weight edges so the edge buffer divides evenly
+    across shards.  Accepts already capacity-padded buffers (e.g. from the
+    streaming graph store) — padding slots stay inert through the shards'
+    gather/scatter since their weight is zero."""
     e = g.num_edges
-    rem = (-e) % num_shards
-    if rem == 0:
-        return g
-    pad_src = jnp.zeros((rem,), jnp.int32)
-    pad_dst = jnp.ones((rem,), jnp.int32)
-    return EdgeList(
-        src=jnp.concatenate([g.src, pad_src]),
-        dst=jnp.concatenate([g.dst, pad_dst]),
-        weight=jnp.concatenate([g.weight, jnp.zeros((rem,), jnp.float32)]),
-        num_nodes=g.num_nodes,
-    )
+    return lap_mod.pad_edge_list(g, e + ((-e) % num_shards))
 
 
 def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",)):
@@ -60,11 +54,7 @@ def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",)):
         in_specs=(spec_e, spec_e, spec_e, spec_v),
         out_specs=spec_v)
     def mv(src, dst, w, v):
-        diff = v[src] - v[dst]
-        wdiff = w[:, None] * diff if v.ndim > 1 else w * diff
-        out = jnp.zeros_like(v)
-        out = out.at[src].add(wdiff)
-        out = out.at[dst].add(-wdiff)
+        out = lap_mod.edge_matvec_arrays(src, dst, w, v)
         return jax.lax.psum(out, edge_axes)
 
     return mv

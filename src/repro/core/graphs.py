@@ -126,6 +126,67 @@ def sbm_graph(
     return make_edge_list(edges, num_nodes), labels
 
 
+def sparse_sbm_graph(
+    num_nodes: int,
+    num_blocks: int,
+    avg_degree_in: float = 8.0,
+    avg_degree_out: float = 0.5,
+    seed: int = 0,
+):
+    """Memory-light SBM for large n (>= 10k nodes, streaming benchmarks).
+
+    `sbm_graph` materializes all O(n^2) node pairs; this samples a
+    binomial edge COUNT per block pair and then draws endpoints, so cost
+    is O(E).  Expected within-block degree is `avg_degree_in`, expected
+    cross-block degree `avg_degree_out`.  Returns (EdgeList, labels).
+    """
+    rng = np.random.default_rng(seed)
+    sizes = np.full((num_blocks,), num_nodes // num_blocks, dtype=np.int64)
+    sizes[: num_nodes % num_blocks] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    labels = np.repeat(np.arange(num_blocks), sizes).astype(np.int32)
+    chunks = []
+    for a in range(num_blocks):
+        na = int(sizes[a])
+        # within-block: n_a * deg_in / 2 edges in expectation
+        pairs_in = na * (na - 1) // 2
+        p_in = min(1.0, avg_degree_in / max(na - 1, 1))
+        m = rng.binomial(pairs_in, p_in)
+        if m:
+            i = rng.integers(starts[a], starts[a + 1], size=m)
+            j = rng.integers(starts[a], starts[a + 1], size=m)
+            chunks.append(np.stack([i, j], axis=1))
+        for b in range(a + 1, num_blocks):
+            nb = int(sizes[b])
+            p_out = min(1.0, avg_degree_out / max(num_nodes - na, 1))
+            m = rng.binomial(na * nb, p_out)
+            if m:
+                i = rng.integers(starts[a], starts[a + 1], size=m)
+                j = rng.integers(starts[b], starts[b + 1], size=m)
+                chunks.append(np.stack([i, j], axis=1))
+    edges = (np.concatenate(chunks, axis=0) if chunks
+             else np.zeros((0, 2), np.int64))
+    edges = edges[edges[:, 0] != edges[:, 1]]  # drop self loops
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    edges = np.unique(np.stack([lo, hi], axis=1), axis=0)
+    # ensure no isolated nodes (chain to the next node in the same block;
+    # a size-1 block chains to its global neighbour instead)
+    present = np.zeros(num_nodes, bool)
+    present[edges.ravel()] = True
+    extra = []
+    for v in np.nonzero(~present)[0]:
+        blk = labels[v]
+        if int(sizes[blk]) > 1:
+            u = int(starts[blk]) + (v - int(starts[blk]) + 1) % int(sizes[blk])
+        else:
+            u = (v + 1) % num_nodes
+        extra.append((min(u, v), max(u, v)))
+    if extra:
+        edges = np.concatenate([edges, np.asarray(extra, np.int64)], axis=0)
+    return make_edge_list(edges.astype(np.int32), num_nodes), labels
+
+
 def ring_of_cliques(num_cliques: int, clique_size: int):
     """Deterministic well-clustered graph for exact tests."""
     n = num_cliques * clique_size

@@ -42,6 +42,30 @@ def make_edge_list(edges, num_nodes: int, weights=None) -> EdgeList:
     return EdgeList(src=src, dst=dst, weight=weights, num_nodes=int(num_nodes))
 
 
+def pad_edge_list(g: EdgeList, capacity: int) -> EdgeList:
+    """Pad to a fixed edge capacity with inert zero-weight slots.
+
+    Zero weight makes padded slots contribute nothing to any edge-wise
+    computation (matvec, degrees, dense L), so every operator in this
+    module — and the sharded matvecs in :mod:`repro.core.distributed` —
+    accepts a capacity-padded EdgeList unchanged.  This is the shape
+    contract of the streaming graph store's capacity classes: all graphs
+    in a class share one compiled program.
+    """
+    e = g.num_edges
+    if capacity < e:
+        raise ValueError(f"capacity {capacity} < num_edges {e}")
+    if capacity == e:
+        return g
+    pad = capacity - e
+    return EdgeList(
+        src=jnp.concatenate([g.src, jnp.zeros((pad,), jnp.int32)]),
+        dst=jnp.concatenate([g.dst, jnp.zeros((pad,), jnp.int32)]),
+        weight=jnp.concatenate([g.weight, jnp.zeros((pad,), jnp.float32)]),
+        num_nodes=g.num_nodes,
+    )
+
+
 def incidence_matrix(g: EdgeList) -> jax.Array:
     """Dense incidence matrix X (E x N): +1 at min index, -1 at max index."""
     e = g.num_edges
@@ -83,20 +107,31 @@ def normalized_laplacian_dense(g: EdgeList, eps: float = 1e-12) -> jax.Array:
 # Matrix-free Laplacian matvec from edge lists.
 # ---------------------------------------------------------------------------
 
+def edge_matvec_arrays(src: jax.Array, dst: jax.Array, weight: jax.Array,
+                       v: jax.Array) -> jax.Array:
+    """Raw-array Laplacian matvec: Σ_e w_e x_e (x_eᵀ v) from bare edge
+    buffers.  The single implementation of the edge-wise gather/scatter;
+    every consumer (EdgeList matvec, graph-store ticks, eigen-update
+    deltas, sharded shards) wraps this.  Zero-weight slots are inert, so
+    capacity-padded buffers pass through unchanged.
+    """
+    diff = v[src] - v[dst]  # (E,) or (E, K) == X @ v
+    if diff.ndim == 1:
+        wdiff = weight * diff
+    else:
+        wdiff = weight[:, None] * diff
+    out = jnp.zeros_like(v)
+    out = out.at[src].add(wdiff)
+    out = out.at[dst].add(-wdiff)
+    return out
+
+
 def laplacian_matvec(g: EdgeList, v: jax.Array) -> jax.Array:
     """L @ v computed edge-wise: sum_e w_e * x_e (x_e^T v).
 
     v: (N,) or (N, K).  Cost O(E*K); never materializes L.
     """
-    diff = v[g.src] - v[g.dst]  # (E,) or (E, K) == X @ v
-    if diff.ndim == 1:
-        wdiff = g.weight * diff
-    else:
-        wdiff = g.weight[:, None] * diff
-    out = jnp.zeros_like(v)
-    out = out.at[g.src].add(wdiff)
-    out = out.at[g.dst].add(-wdiff)
-    return out
+    return edge_matvec_arrays(g.src, g.dst, g.weight, v)
 
 
 def minibatch_laplacian_matvec(

@@ -33,6 +33,19 @@ def eigenvector_streak(v: jax.Array, v_star: jax.Array,
     return jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
 
 
+def panel_residual(v: jax.Array, av: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """Relative block-Rayleigh residual ||A V - V (V^T A V)||_F / ||A V||_F.
+
+    Ground-truth-free convergence signal: 0 iff span(V) is an invariant
+    subspace of A.  Used by the streaming service to decide per-session
+    convergence and by warm-start to decide restart-vs-continue (columns
+    of V are assumed orthonormal, as solver states maintain).
+    """
+    rayleigh = v.T @ av  # (k, k)
+    r = av - v @ rayleigh
+    return jnp.linalg.norm(r) / jnp.maximum(jnp.linalg.norm(av), eps)
+
+
 def ground_truth_bottom_k(l_mat: jax.Array, k: int, drop_trivial: bool = False):
     """Bottom-k eigenpairs of dense L via eigh (ascending).
 

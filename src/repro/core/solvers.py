@@ -43,6 +43,19 @@ def init_state(key: jax.Array, n: int, k: int, dtype=jnp.float32) -> SolverState
     return SolverState(v=q, step=jnp.zeros((), jnp.int32))
 
 
+def init_from_panel(v: jax.Array) -> SolverState:
+    """Warm-start hook: seed a solver from an existing (n, k) panel.
+
+    Orthonormalizes via QR (with the same sign fix as `oja_step`), so a
+    previous session's converged eigenvectors — or a first-order
+    incrementally-updated panel — can seed the next solve directly.
+    """
+    q, r = jnp.linalg.qr(v)
+    sign = jnp.sign(jnp.diagonal(r))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    return SolverState(v=q * sign[None, :], step=jnp.zeros((), jnp.int32))
+
+
 def oja_step(state: SolverState, av: jax.Array, lr: float) -> SolverState:
     """V <- QR(V + lr * A V).  One Oja update with QR retraction."""
     v = state.v + lr * av
@@ -100,16 +113,22 @@ def run_solver(
     cfg: SolverConfig,
     v_star: jax.Array | None = None,
     stochastic: bool = False,
+    init_v: jax.Array | None = None,
 ) -> tuple[SolverState, Trace]:
     """Run a solver, recording metrics against ground truth v_star.
 
     The whole run is one jitted scan over eval chunks, so Python overhead
-    is O(1) in the number of steps.
+    is O(1) in the number of steps.  `init_v` warm-starts from an (n, k)
+    panel (orthonormalized via `init_from_panel`) instead of the default
+    random init — the streaming service's reconvergence path.
     """
     step_fn = STEP_FNS[cfg.method]
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
-    state0 = init_state(init_key, n, cfg.k)
+    if init_v is None:
+        state0 = init_state(init_key, n, cfg.k)
+    else:
+        state0 = init_from_panel(init_v)
     num_evals = max(1, cfg.steps // cfg.eval_every)
     if v_star is None:
         v_star = jnp.zeros((n, cfg.k))

@@ -30,6 +30,8 @@ import time
 import traceback
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -161,7 +163,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     batch_sds, kind = input_specs(cfg, shape_name)
     sh = SHAPES[shape_name]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params_sds = jax.eval_shape(
             functools.partial(model_lib.init, cfg=cfg), jax.random.PRNGKey(0))
         if kind != "train":

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.launch.mesh import make_production_mesh
 from repro.launch import dryrun as dr
 from repro.core import series as series_lib
@@ -93,7 +94,7 @@ def build_step(variant: str, mesh, edge_axes, lr: float = 0.1):
 
     if variant.endswith("bf16"):
         import functools as ft
-        from jax import shard_map
+        from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
 
         @ft.partial(shard_map, mesh=mesh,
@@ -129,7 +130,7 @@ def run_cell(variant: str, multi_pod: bool):
     t0 = time.time()
     edge_axes = tuple(a for a in ("pod", "data", "model")
                       if a in mesh.axis_names)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         v_sds = SDS((N_NODES, K), jnp.float32)
         e_sh = {k: NamedSharding(mesh, P(edge_axes))
                 for k in ("src", "dst", "weight")}

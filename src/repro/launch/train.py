@@ -23,6 +23,8 @@ import os
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -64,7 +66,7 @@ def train_lm(args):
                                               grads)
         return params, opt_state, {**metrics, **om, "loss": loss}
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
         opt_state = opt_lib.init(opt_cfg, params)
         start = 0

@@ -22,6 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ArchConfig
 from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
 from repro.models.sharding import maybe_shard
@@ -277,7 +279,7 @@ def _decode_attention_cp(cfg: ArchConfig, q, cache: KVCache, mesh):
     form keeps the per-device temp at the local slice (~0.8 GB).
     """
     import functools as ft
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     b, _, h, hd = q.shape
     sk = cache.k.shape[1]
@@ -337,7 +339,7 @@ def gqa_decode(p, cfg: ArchConfig, x, cache: KVCache):
     q, k_new, v_new = _project_qkv(p, cfg, x, pos)
     cache = cache_update(cache, k_new, v_new, cache.length)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     out = None
     if not mesh.empty:
         out = _decode_attention_cp(cfg, q, cache, mesh)

@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs.base import ArchConfig
 from repro.models.layers import dense_init
 from repro.models.sharding import maybe_shard
@@ -57,7 +59,7 @@ def _num_groups(batch: int) -> int:
     MoE all-to-all.  Without groups, GSPMD must all-reduce global-token
     scatters, which is catastrophically oversized (observed 52 TiB/step
     on deepseek-v2 before this fix)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return 1
     present = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -143,7 +145,7 @@ def _moe_ffn_shard_map(p, cfg: ArchConfig, x, mesh, dp, tp):
     on deepseek-v2 -> now 0.7 GiB bf16).
     """
     import functools as ft
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     b, s, d = x.shape
@@ -242,7 +244,7 @@ def moe_ffn(p, cfg: ArchConfig, x):
 
     With a mesh in context (and divisible dims) the shard_map fast path
     runs; the global-jit grouped form is the fallback/reference."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if not mesh.empty:
         dp, tp, sizes = _sm_axes(mesh, x.shape[0])
         tp_ext = sizes.get(tp, 1) if tp else 1

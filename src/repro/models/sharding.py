@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 # logical -> candidate mesh axis names (first ones present in the mesh win)
 LOGICAL = {
     "dp": ("pod", "data"),  # batch-parallel axes
@@ -21,7 +23,7 @@ LOGICAL = {
 
 def resolve_spec(*logical_axes) -> P:
     """Map logical axis names to a PartitionSpec for the current mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return P()
     present = set(mesh.axis_names)
@@ -42,7 +44,7 @@ def resolve_spec(*logical_axes) -> P:
 
 def maybe_shard(x: jax.Array, *logical_axes) -> jax.Array:
     """with_sharding_constraint if a mesh is in context, else identity."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return x
     return jax.lax.with_sharding_constraint(x, resolve_spec(*logical_axes))
@@ -51,7 +53,7 @@ def maybe_shard(x: jax.Array, *logical_axes) -> jax.Array:
 def shardable(dim: int, logical: str) -> bool:
     """True if `dim` divides evenly over the mesh extent of the logical
     axis (used to decide e.g. whether KV heads can be tensor-sharded)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return False
     ext = 1

@@ -1,0 +1,406 @@
+"""Multi-tenant streaming clustering service.
+
+Owns many mutable graphs (stream.graph_store), each with a live
+eigenvector panel, and advances them with BATCHED jitted ticks:
+
+  * Sessions are grouped by CAPACITY CLASS — (node_cap, edge_cap) — and
+    every group tick is ONE compiled program vmapped over the group's
+    stacked edge buffers and panels.  Shapes never depend on a session's
+    live edge count or real node count, so admitting graph #9 to a class
+    that already ticked reuses the compiled step (no per-session
+    recompilation).  Groups are padded to power-of-two occupancy with
+    replicas of the first session, so evictions only recompile when the
+    occupancy bucket changes (log2 many programs per class, ever).
+  * The per-session operator is the dilated reversed Laplacian
+    (I - c L)^degree — the paper's limit_neg_exp series with λ* = 0 —
+    with the dilation scale c = strength / (ρ_ub · degree) a TRACED
+    per-session input (different graphs, one program).
+  * Per-session convergence is the ground-truth-free panel residual;
+    converged sessions leave the tick rotation, get their eigen estimate
+    anchored (stream.updates), and serve labels until edge updates
+    arrive.  Updates take the cheap first-order eigen-update path and
+    only re-enter the solve rotation when accumulated drift triggers the
+    fallback, warm-started per stream.warm's restart test.
+
+Node padding invariant: panels keep EXACT zeros on rows >= the session's
+real node count.  No edge ever touches a padding node, and every solver
+operation (edge matvec, series recurrence, QR, normalization) maps zero
+rows to zero rows, so the padded problem is numerically identical to the
+unpadded one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as km
+from repro.core import laplacian as lap
+from repro.core import metrics, solvers
+from repro.stream import graph_store as gs
+from repro.stream import tracking, updates, warm
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(x, 1)))), 0)
+
+
+def node_capacity_class(num_nodes: int) -> int:
+    """Node-count capacity class (power of two >= num_nodes)."""
+    return max(_next_pow2(num_nodes), 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    k: int = 6  # eigenvectors tracked per session
+    num_clusters: int = 4  # default clusters served per session
+    method: str = "mu_eg"  # solver step: "mu_eg" | "oja"
+    lr: float = 0.3
+    degree: int = 15  # odd; series degree of the dilation polynomial
+    dilation_strength: float = 8.0
+    steps_per_tick: int = 20  # solver steps per session per tick
+    tol: float = 2e-3  # panel-residual convergence target
+    restart_residual: float = 0.6  # warm.py restart test
+    fallback_ratio: float = 0.5  # updates.py drift fallback
+    min_batch_pad: int = 16  # update batches pad to pow2 >= this
+    drop_trivial: bool = True  # skip the all-ones nullvector in embeddings
+    kmeans_restarts: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.degree % 2 == 0:
+            raise ValueError("degree must be odd (limit_neg_exp series)")
+
+
+@dataclasses.dataclass
+class _Session:
+    sid: str
+    n: int  # real node count (<= store.num_nodes == node capacity)
+    num_clusters: int
+    store: gs.GraphStore
+    v: jax.Array  # (node_cap, k) panel, zero rows >= n
+    c: float  # dilation scale per matvec
+    tracker: tracking.LabelTracker
+    est: updates.EigenEstimate | None = None
+    converged: bool = False
+    residual: float = float("inf")
+    ticks: int = 0
+    solves: int = 0  # full (re-)solve episodes entered
+    incremental_updates: int = 0
+    fallbacks: int = 0
+
+
+_edge_mv = lap.edge_matvec_arrays
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _op_apply(src, dst, w, v, c, degree):
+    """(I - c L)^degree V — the dilated reversed operator, one session."""
+    def body(_, u):
+        return u - c * _edge_mv(src, dst, w, u)
+    return jax.lax.fori_loop(0, degree, body, v)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _op_residual(src, dst, w, v, c, degree):
+    av = _op_apply(src, dst, w, v, c, degree)
+    return metrics.panel_residual(v, av)
+
+
+@jax.jit
+def _anchor_estimate(src, dst, w, v):
+    """λ = diag(Vᵀ L V) on the store's padded edge buffer."""
+    return updates.estimate_from_panel(
+        lambda x: _edge_mv(src, dst, w, x), v)
+
+
+@functools.partial(jax.jit, static_argnames=("node_cap", "n", "k"))
+def _init_panel(key, node_cap: int, n: int, k: int):
+    """Random orthonormal panel supported on the first n rows."""
+    v = jax.random.normal(key, (node_cap, k), jnp.float32)
+    v = v * (jnp.arange(node_cap) < n)[:, None]
+    q, _ = jnp.linalg.qr(v)
+    return q
+
+
+class StreamingService:
+    """Session manager: admission, streaming updates, batched ticking,
+    label serving, eviction."""
+
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        self._sessions: dict[str, _Session] = {}
+        self._compiled: dict[tuple, object] = {}
+        self._admitted = 0
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+
+    def add_graph(self, sid: str, g, num_clusters: int | None = None,
+                  edge_capacity: int | None = None) -> None:
+        """Admit a graph into its capacity class, cold-initialized."""
+        if sid in self._sessions:
+            raise ValueError(f"session {sid!r} already exists")
+        cfg = self.cfg
+        clusters = num_clusters or cfg.num_clusters
+        need = clusters + (1 if cfg.drop_trivial else 0)
+        if need > cfg.k:
+            raise ValueError(
+                f"num_clusters={clusters} needs {need} tracked "
+                f"eigenvectors (drop_trivial={cfg.drop_trivial}) but "
+                f"ServiceConfig.k={cfg.k}")
+        node_cap = node_capacity_class(g.num_nodes)
+        store = gs.from_edge_list(g, capacity=edge_capacity,
+                                  num_nodes=node_cap)
+        store, rho = gs.spectral_radius_upper_bound(store)
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                 self._admitted)
+        self._admitted += 1
+        sess = _Session(
+            sid=sid,
+            n=g.num_nodes,
+            num_clusters=clusters,
+            store=store,
+            v=_init_panel(key, node_cap, g.num_nodes, cfg.k),
+            c=float(cfg.dilation_strength / (max(float(rho), 1e-30)
+                                             * cfg.degree)),
+            tracker=tracking.LabelTracker(clusters),
+        )
+        sess.solves = 1  # the admission cold solve
+        self._sessions[sid] = sess
+
+    def evict(self, sid: str) -> dict:
+        """Remove a session; returns its summary."""
+        sess = self._sessions.pop(sid)
+        return self._summary(sess)
+
+    def evict_converged(self) -> dict[str, dict]:
+        """Drop every converged session (label consumers are done)."""
+        done = [s for s in self._sessions.values() if s.converged]
+        return {s.sid: self.evict(s.sid) for s in done}
+
+    # ------------------------------------------------------------------
+    # streaming updates
+    # ------------------------------------------------------------------
+
+    def apply_updates(self, sid: str, edges, weights,
+                      mode: str = "set") -> gs.BatchStats:
+        """Apply an edge batch; converged sessions take the first-order
+        eigen-update path, falling back to a warm re-solve on drift."""
+        cfg = self.cfg
+        sess = self._sessions[sid]
+        pad = max(_next_pow2(len(np.atleast_1d(weights))),
+                  cfg.min_batch_pad)
+        batch = gs.coalesce_batch(edges, weights, mode=mode, pad_to=pad)
+        store, dw, stats = gs.apply_edge_batch(sess.store, batch, mode=mode)
+        base = sess.store
+        while int(stats.dropped) > 0:
+            # buffer overflow: grow the ORIGINAL store (untouched —
+            # apply is functional) and re-apply the whole batch, growing
+            # again until nothing drops (a batch can exceed one ladder
+            # step).  The session changes capacity class, so its next
+            # tick joins a different group.
+            base = gs.grow(base)
+            store, dw, stats = gs.apply_edge_batch(base, batch, mode=mode)
+        store, rho = gs.spectral_radius_upper_bound(store)
+        sess.store = store
+        sess.c = float(cfg.dilation_strength
+                       / (max(float(rho), 1e-30) * cfg.degree))
+        if sess.est is not None:
+            prev_v = sess.est.v
+            est, drift_flag = updates.update_or_flag(
+                sess.est, batch.src, batch.dst, dw,
+                updates.UpdateConfig(fallback_ratio=cfg.fallback_ratio))
+            sess.v = est.v
+            sess.incremental_updates += 1
+            if not drift_flag:
+                sess.est = est  # cheap path: drift bound still safe
+                return stats
+            # The drift bound is conservative (Σ 2|dw| vs the min
+            # PANEL gap, which bulk eigenvalues make tiny) — so before
+            # paying for a re-solve, VERIFY with one operator
+            # application: does the updated panel still meet tolerance
+            # under the new operator?
+            res = float(self._residual(sess))
+            sess.residual = res
+            if res <= 2.0 * cfg.tol:
+                # panel survived: re-anchor the estimate (drift resets)
+                st = sess.store
+                sess.est = _anchor_estimate(st.src, st.dst, st.weight,
+                                            sess.v)
+                return stats
+            # Full SPED re-solve.  A first-order update outside its
+            # validity region can be WORSE than the stale panel, so seed
+            # from whichever candidate has the lower residual under the
+            # new operator; go cold when even that fails the restart
+            # test (stream.warm).
+            sess.fallbacks += 1
+            sess.est = None
+            sess.converged = False
+            sess.v = prev_v
+            res_prev = float(self._residual(sess))
+            if res <= res_prev:
+                sess.v, best = est.v, res
+            else:
+                best = res_prev
+            if best > cfg.restart_residual:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(cfg.seed + 1), sess.solves)
+                sess.v = _init_panel(key, sess.store.num_nodes,
+                                     sess.n, cfg.k)
+            sess.residual = best
+            sess.solves += 1
+        return stats
+
+    # ------------------------------------------------------------------
+    # batched ticking
+    # ------------------------------------------------------------------
+
+    def _class_key(self, sess: _Session) -> tuple[int, int]:
+        return (sess.store.num_nodes, sess.store.capacity)
+
+    def _get_step(self, node_cap: int, edge_cap: int, occupancy: int):
+        key = (node_cap, edge_cap, occupancy)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._build_step()
+            self._compiled[key] = fn
+        return fn
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct compiled tick programs (capacity class × occupancy
+        bucket) — the no-per-session-recompilation invariant's witness."""
+        return len(self._compiled)
+
+    def _build_step(self):
+        cfg = self.cfg
+        step_fn = solvers.STEP_FNS[cfg.method]
+
+        def one(src, dst, w, v, c):
+            def opv(u):
+                def body(_, x):
+                    return x - c * _edge_mv(src, dst, w, x)
+                return jax.lax.fori_loop(0, cfg.degree, body, u)
+
+            state = solvers.SolverState(v=v, step=jnp.zeros((), jnp.int32))
+
+            def sstep(st, _):
+                return step_fn(st, opv(st.v), cfg.lr), None
+
+            state, _ = jax.lax.scan(
+                sstep, state, None, length=cfg.steps_per_tick)
+            av = opv(state.v)
+            return state.v, metrics.panel_residual(state.v, av)
+
+        return jax.jit(jax.vmap(one))
+
+    def tick(self) -> dict[str, float]:
+        """Advance every unconverged session cfg.steps_per_tick solver
+        steps — one compiled program invocation per capacity class."""
+        cfg = self.cfg
+        groups: dict[tuple, list[_Session]] = defaultdict(list)
+        totals: dict[tuple, int] = defaultdict(int)
+        for sess in self._sessions.values():
+            totals[self._class_key(sess)] += 1
+            if not sess.converged:
+                groups[self._class_key(sess)].append(sess)
+        out: dict[str, float] = {}
+        for (node_cap, edge_cap), members in groups.items():
+            # occupancy bucket follows the class's TOTAL session count,
+            # not the active count, so sessions converging one by one
+            # never shrink the bucket (stable shapes => zero recompiles
+            # until the user actually evicts)
+            occ = _next_pow2(totals[(node_cap, edge_cap)])
+            step = self._get_step(node_cap, edge_cap, occ)
+            idx = list(range(len(members))) + [0] * (occ - len(members))
+            stack = lambda f: jnp.stack([f(members[i]) for i in idx])
+            vs, res = step(
+                stack(lambda s: s.store.src),
+                stack(lambda s: s.store.dst),
+                stack(lambda s: s.store.weight),
+                stack(lambda s: s.v),
+                jnp.asarray([members[i].c for i in idx], jnp.float32),
+            )
+            res = np.asarray(res)
+            for i, sess in enumerate(members):
+                sess.v = vs[i]
+                sess.residual = float(res[i])
+                sess.ticks += 1
+                out[sess.sid] = sess.residual
+                if sess.residual <= cfg.tol:
+                    sess.converged = True
+                    st = sess.store
+                    sess.est = _anchor_estimate(st.src, st.dst, st.weight,
+                                                sess.v)
+        return out
+
+    @property
+    def all_converged(self) -> bool:
+        return all(s.converged for s in self._sessions.values())
+
+    def run_until_converged(self, max_ticks: int = 500) -> int:
+        """Tick until every session converges; returns ticks used.
+
+        Check `all_converged` afterwards: hitting the tick budget without
+        converging also returns (with the budget spent), and serving
+        labels from an unconverged panel is the caller's decision.
+        """
+        used = 0
+        while not self.all_converged and used < max_ticks:
+            self.tick()
+            used += 1
+        return used
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _residual(self, sess: _Session) -> float:
+        st = sess.store
+        return float(_op_residual(st.src, st.dst, st.weight, sess.v,
+                                  sess.c, self.cfg.degree))
+
+    def live_edges(self, sid: str) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, weight) of the session's live edges — the public
+        view of the store for consumers building update batches."""
+        st = self._sessions[sid].store
+        w = np.asarray(st.weight)
+        live = w != 0
+        return np.asarray(st.src)[live], np.asarray(st.dst)[live], w[live]
+
+    def labels(self, sid: str) -> np.ndarray:
+        """Current cluster assignment with STABLE ids (tracking.py)."""
+        cfg = self.cfg
+        sess = self._sessions[sid]
+        start = 1 if cfg.drop_trivial else 0
+        emb = sess.v[: sess.n, start: start + sess.num_clusters]
+        norms = jnp.linalg.norm(emb, axis=1, keepdims=True)
+        emb = emb / jnp.maximum(norms, 1e-12)
+        res = km.kmeans(
+            jax.random.PRNGKey(cfg.seed + 2), emb, sess.num_clusters,
+            restarts=cfg.kmeans_restarts)
+        return np.asarray(sess.tracker.update(res.labels))
+
+    def session_info(self, sid: str) -> dict:
+        return self._summary(self._sessions[sid])
+
+    @staticmethod
+    def _summary(sess: _Session) -> dict:
+        return {
+            "n": sess.n,
+            "node_capacity": sess.store.num_nodes,
+            "edge_capacity": sess.store.capacity,
+            "num_edges": int(gs.num_edges(sess.store)),
+            "converged": sess.converged,
+            "residual": sess.residual,
+            "ticks": sess.ticks,
+            "solves": sess.solves,
+            "incremental_updates": sess.incremental_updates,
+            "fallbacks": sess.fallbacks,
+        }

@@ -1,0 +1,70 @@
+"""Stable cluster ids across re-solves.
+
+k-means labels are only defined up to permutation, and every re-solve
+(or even re-run of k-means) can permute them.  Downstream consumers of a
+streaming clustering service need STABLE ids: cluster 3 today should be
+cluster 3 after tonight's edge batch unless the community actually
+changed.  `LabelTracker` matches each new labelling to the previous one
+by greedy maximum-overlap assignment (the same greedy used by
+kmeans.cluster_agreement, here returning the permutation instead of the
+score) and relabels accordingly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def overlap_matrix(ref: jax.Array, new: jax.Array, k: int) -> jax.Array:
+    """(k, k) counts: [i, j] = #nodes with ref label i and new label j."""
+    m = jnp.zeros((k, k))
+    return m.at[ref, new].add(1.0)
+
+
+@jax.jit
+def _greedy_perm(conf: jax.Array) -> jax.Array:
+    """perm[j] = stable id for new label j, by repeatedly taking the
+    largest remaining overlap cell (each pick eliminates one row+col, so
+    after k picks the permutation is total and injective)."""
+    k = conf.shape[0]
+
+    def body(_, carry):
+        conf, perm = carry
+        idx = jnp.argmax(conf)
+        i, j = idx // k, idx % k
+        perm = perm.at[j].set(i)
+        conf = conf.at[i, :].set(-1.0).at[:, j].set(-1.0)
+        return conf, perm
+
+    _, perm = jax.lax.fori_loop(
+        0, k, body, (conf, jnp.zeros((k,), jnp.int32)))
+    return perm
+
+
+def match_labels(ref: jax.Array, new: jax.Array, k: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Permute `new`'s label ids to maximize (greedy) overlap with `ref`.
+
+    Returns (relabelled, perm) with relabelled = perm[new].
+    """
+    perm = _greedy_perm(overlap_matrix(ref, new, k))
+    return perm[new], perm
+
+
+class LabelTracker:
+    """Per-session label continuity: feed each fresh labelling through
+    `update`, read back stable ids."""
+
+    def __init__(self, num_clusters: int):
+        self.k = num_clusters
+        self.ref: jax.Array | None = None
+
+    def update(self, labels: jax.Array) -> jax.Array:
+        labels = jnp.asarray(labels)
+        if self.ref is None:
+            self.ref = labels
+            return labels
+        stable, _ = match_labels(self.ref, labels, self.k)
+        self.ref = stable
+        return stable

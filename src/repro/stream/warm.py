@@ -1,0 +1,136 @@
+"""Warm-started SPED solver sessions (Zhuzhunashvili & Knyazev-style).
+
+On a streaming graph, consecutive solves differ by a small edge
+perturbation, so the previous eigenvector panel V is an excellent initial
+guess — UNLESS the graph changed so much that iterating from V is slower
+than restarting (the preconditioned-streaming observation).  The
+restart-vs-continue decision here is the ground-truth-free block residual
+of the OLD panel under the NEW operator:
+
+    r = ||A V - V (V^T A V)||_F / ||A V||_F     (metrics.panel_residual)
+
+r small  -> continue from QR(V)  (solvers.init_from_panel);
+r large  -> the panel carries no usable information; restart cold.
+
+Dilation composes multiplicatively with warm-starting: the dilated gaps
+set the per-iteration contraction rate, the warm start sets the initial
+error — both shrink iterations-to-reconverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics, solvers
+
+MatVec = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmConfig:
+    # residual above which the previous panel is considered uninformative
+    # (a random orthonormal panel sits near sqrt(1 - k/n) ~ 1)
+    restart_residual: float = 0.6
+    tol: float = 1e-3  # reconvergence target on panel_residual
+    chunk: int = 10  # solver steps between residual checks
+    max_steps: int = 5000
+    lr: float = 0.1
+    method: str = "mu_eg"
+
+
+def warm_start_state(
+    key: jax.Array,
+    op: MatVec,
+    n: int,
+    k: int,
+    v_prev: jax.Array | None,
+    restart_residual: float = 0.6,
+) -> tuple[solvers.SolverState, dict]:
+    """Seed a solver session: previous panel if it passes the restart
+    test, random otherwise.  Returns (state, info)."""
+    cold = solvers.init_state(key, n, k)
+    if v_prev is None:
+        return cold, {"warm": False, "residual": None}
+    state = solvers.init_from_panel(v_prev)
+    res = float(metrics.panel_residual(state.v, op(state.v)))
+    if res <= restart_residual:
+        return state, {"warm": True, "residual": res}
+    return cold, {"warm": False, "residual": res}
+
+
+def _chunk_runner(op: MatVec, method: str, chunk: int, lr: float):
+    """Compiled chunk step, cached ON the operator object itself so
+    repeated run_to_tolerance calls against the same operator — the
+    streaming reconvergence pattern — retrace nothing, while the cache
+    (which pins the op's captured edge buffers and the XLA executable)
+    dies with the operator.  The op <-> runner reference cycle is
+    ordinary gc fodder; no module-global cache pins process memory.
+    Callables that reject attributes simply pay a retrace per call.
+    """
+    key = (method, chunk, lr)
+    cache = getattr(op, "_warm_chunk_cache", None)
+    if cache is not None and key in cache:
+        return cache[key]
+    step_fn = solvers.STEP_FNS[method]
+
+    @jax.jit
+    def run(st: solvers.SolverState):
+        def body(s, _):
+            return step_fn(s, op(s.v), lr), None
+        st, _ = jax.lax.scan(body, st, None, length=chunk)
+        return st, metrics.panel_residual(st.v, op(st.v))
+
+    try:
+        if cache is None:
+            cache = {}
+            op._warm_chunk_cache = cache
+        cache[key] = run
+    except AttributeError:
+        pass
+    return run
+
+
+def run_to_tolerance(
+    op: MatVec,
+    state: solvers.SolverState,
+    cfg: WarmConfig,
+) -> tuple[solvers.SolverState, int, float]:
+    """Iterate until panel_residual <= cfg.tol; returns
+    (state, iterations_used, final_residual).
+
+    The chunked loop is jitted once per (operator, hyperparameters) —
+    see _chunk_runner; the host only sees one residual scalar every
+    `chunk` steps — the convergence probe the streaming service's tick
+    loop uses per session.
+    """
+    chunk = _chunk_runner(op, cfg.method, cfg.chunk, cfg.lr)
+    used = 0
+    res = float(metrics.panel_residual(state.v, op(state.v)))
+    while res > cfg.tol and used < cfg.max_steps:
+        state, r = chunk(state)
+        used += cfg.chunk
+        res = float(r)
+    return state, used, res
+
+
+def reconverge(
+    key: jax.Array,
+    op: MatVec,
+    n: int,
+    k: int,
+    cfg: WarmConfig,
+    v_prev: jax.Array | None = None,
+) -> tuple[solvers.SolverState, dict]:
+    """Full warm (or cold, if v_prev fails the restart test) re-solve.
+
+    Returns (state, info) with info["iterations"] — the quantity the
+    streaming benchmark compares against a cold solve.
+    """
+    state, info = warm_start_state(
+        key, op, n, k, v_prev, cfg.restart_residual)
+    state, used, res = run_to_tolerance(op, state, cfg)
+    info = dict(info, iterations=used, residual=res)
+    return state, info

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (see pyproject.toml [test] extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.edge_spmm import ops as es_ops, ref as es_ref

@@ -7,6 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
+
+pytestmark = pytest.mark.slow  # long-running; excluded from scripts/ci.sh fast lane
+
 
 def test_sped_training_driver_converges(tmp_path):
     from repro.launch.train import main
@@ -43,9 +47,8 @@ def test_moe_shard_map_matches_reference_path():
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
                           jnp.float32) * 0.3
     ref, aux_ref = moe_mod.moe_ffn(p, cfg, x)  # no mesh -> fallback
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         got, aux = jax.jit(lambda p, x: moe_mod.moe_ffn(p, cfg, x))(p, x)
     np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2)
     np.testing.assert_allclose(aux, aux_ref, rtol=1e-4, atol=1e-5)
@@ -66,9 +69,8 @@ def test_decode_step_under_mesh_matches_no_mesh():
     for t in range(s):
         logits_ref, state = model_lib.decode_step(p, cfg, state,
                                                   toks[:, t: t + 1])
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         state = model_lib.init_caches(cfg, b, s + 1)
         step = jax.jit(lambda p, st, t: model_lib.decode_step(p, cfg, st, t))
         for t in range(s):

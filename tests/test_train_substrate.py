@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # long-running; excluded from scripts/ci.sh fast lane
+
 from repro.data.pipeline import EdgePipeline, TokenPipeline
 from repro.train import checkpoint as ckpt
 from repro.train import fault
