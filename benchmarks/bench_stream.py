@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import time_call, write_bench_json
 from repro.core import graphs, make_edge_list, operators
 from repro.core.laplacian import spectral_radius_upper_bound
 from repro.core.series import limit_neg_exp
@@ -96,6 +96,12 @@ def run():
         f"iters={winfo['iterations']};warm={winfo['warm']};"
         f"iter_speedup={speedup:.1f}x"))
     assert winfo["residual"] <= cfg.tol
+    write_bench_json(
+        "stream", rows,
+        extra={"config": {"n_nodes": N_NODES, "n_blocks": N_BLOCKS, "k": K,
+                          "degree": DEGREE, "strength": STRENGTH,
+                          "batch": BATCH},
+               "iter_speedup_warm_vs_cold": speedup})
     return rows
 
 

@@ -1,6 +1,10 @@
-"""Shared benchmark utilities: timing + the paper's convergence protocol."""
+"""Shared benchmark utilities: timing, the paper's convergence protocol,
+and the machine-readable BENCH_<name>.json writer that tracks the perf
+trajectory across PRs."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,6 +17,32 @@ from repro.core import (SolverConfig, identity_series, laplacian_dense,
                         with_lambda_star)
 from repro.core import metrics, operators
 from repro.core.series import cheb_log
+
+
+def write_bench_json(name: str, rows, extra: dict | None = None) -> str:
+    """Write BENCH_<name>.json at the repo root; returns the path.
+
+    ``rows`` are the harness's (name, us_per_call, derived) CSV triples;
+    ``extra`` carries benchmark-specific structured results (e.g. the
+    spectral planner's per-family iteration counts).  One schema for
+    every bench module so the perf trajectory is diffable across PRs.
+    """
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(repo_root, f"BENCH_{name}.json")
+    payload = {
+        "schema_version": 1,
+        "bench": name,
+        "rows": [
+            {"name": n, "us_per_call": float(us), "derived": str(derived)}
+            for n, us, derived in rows
+        ],
+    }
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:

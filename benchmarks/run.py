@@ -1,5 +1,9 @@
 """Benchmark harness: one module per paper table/figure.  Prints
-``name,us_per_call,derived`` CSV rows (and nothing else)."""
+``name,us_per_call,derived`` CSV rows (and nothing else on stdout).
+
+Modules with cross-PR perf trajectories (bench_spectral, bench_stream)
+additionally write machine-readable ``BENCH_<name>.json`` files at the
+repo root via :func:`benchmarks.common.write_bench_json`."""
 from __future__ import annotations
 
 import sys
@@ -8,8 +12,10 @@ import sys
 def main() -> None:
     from benchmarks import (bench_baselines, bench_cliques, bench_kernels,
                             bench_linkpred, bench_mdp, bench_series_degree,
-                            bench_stream, bench_transforms, bench_walks)
+                            bench_spectral, bench_stream, bench_transforms,
+                            bench_walks)
     mods = [
+        ("spectral", bench_spectral),
         ("stream", bench_stream),
         ("table2", bench_transforms),
         ("fig2_3", bench_mdp),

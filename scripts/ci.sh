@@ -4,4 +4,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -m "not slow" "$@"
+# Stochastic probing suite first (fixed PRNG seeds — deterministic, and
+# cheap): a regression in the spectral probes invalidates every
+# downstream auto-tuned result, so fail fast on it.
+python -m pytest -q -m "stochastic and not slow"
+exec python -m pytest -q -m "not slow and not stochastic" "$@"

@@ -20,7 +20,9 @@ from repro.core import metrics, operators, series, solvers
 class ClusteringConfig:
     num_clusters: int = 4
     extra_eigvecs: int = 1  # compute k + extra for a stable embedding
-    transform: str = "limit_neg_exp"  # key into series factories / 'identity'
+    # key into series factories / 'identity' / 'auto' (probe the spectrum
+    # and let repro.spectral.plan_dilation pick family+degree+scale)
+    transform: str = "limit_neg_exp"
     degree: int = 251
     auto_scale: bool = True  # pre-scale L to a target radius (beyond-paper, Fig.4 fix)
     # effective decay strength tau: with auto_scale, the transform acts like
@@ -62,8 +64,25 @@ def spectral_cluster(
 ):
     """Run the full pipeline.  Returns (labels, info dict)."""
     rho_ub = float(lap.spectral_radius_upper_bound(g))
-    s = build_series(cfg, rho_ub)
     k = cfg.num_clusters + cfg.extra_eigvecs + (1 if cfg.drop_trivial else 0)
+    plan = None
+    if cfg.transform == "auto":
+        from repro import spectral  # deferred: spectral builds on core
+
+        _, plan = spectral.probe_and_plan(
+            g, k=k, key=jax.random.PRNGKey(cfg.seed + 3), budget=cfg.degree)
+        s = spectral.series_from_plan(plan)
+        if cfg.estimation != "walks":
+            # solver steps are not scale-invariant; renormalize the
+            # user's lr (tuned for unit-scale series) to the planned
+            # operator's scale.  The walks estimator builds its own
+            # unit-scale operator below and ignores the planned series,
+            # so its lr must stay untouched.
+            cfg = dataclasses.replace(
+                cfg, solver=dataclasses.replace(
+                    cfg.solver, lr=plan.suggested_lr(cfg.solver.lr)))
+    else:
+        s = build_series(cfg, rho_ub)
     scfg = dataclasses.replace(cfg.solver, k=k, seed=cfg.seed)
 
     mv = operators.edge_matvec(g)
@@ -109,6 +128,7 @@ def spectral_cluster(
         "rho_ub": rho_ub,
         "eigvecs": state.v,
         "embedding": embedding,
+        "plan": plan,
     }
     return result.labels, info
 

@@ -87,15 +87,57 @@ def minibatch_operator(
 
 
 def scaled_series_for_graph(
-    g: lap.EdgeList, series_fn, degree: int, target_radius: float = 1.0
+    g: lap.EdgeList, series_fn, degree: int, target_radius: float = 1.0,
+    rho: float | None = None,
 ):
-    """Beyond-paper helper: pre-scale L by target_radius/rho_ub so a fixed-
+    """Beyond-paper helper: pre-scale L by target_radius/rho so a fixed-
     degree series stays accurate regardless of the graph's max degree —
     this addresses the paper's Fig. 4 failure mode (series under-resolved
     when deg* blows up).  Scaling L preserves eigenvectors and ORDER, so
     it is itself an eigenvector-preserving transform.
+
+    `rho` takes a probed spectral-radius estimate (repro.spectral); the
+    Gershgorin-style `spectral_radius_upper_bound` remains the default —
+    it over-estimates by ~2x on dense graphs, which silently halves the
+    effective dilation; prefer `planned_operator` when the probe cost
+    (a few dozen matvecs) is affordable.
     """
-    rho_ub = float(lap.spectral_radius_upper_bound(g))
-    scale = target_radius / max(rho_ub, 1e-30)
+    if rho is None:
+        rho = float(lap.spectral_radius_upper_bound(g))
+    scale = target_radius / max(rho, 1e-30)
     return series_fn(degree, scale=scale) if "scale" in series_fn.__code__.co_varnames \
         else series_fn(degree)
+
+
+def planned_operator(
+    g: lap.EdgeList,
+    k: int,
+    key: jax.Array | None = None,
+    budget: int = 96,
+    estimation: str = "exact_edges",
+    batch_edges: int = 1024,
+    num_probes: int = 4,
+    num_steps: int = 24,
+):
+    """Probe the graph's spectrum and build an auto-tuned solver operator.
+
+    SLQ-probes lambda_max and the bottom-edge eigengap (a few dozen
+    single-vector matvecs), plans transform family / degree / strength
+    via repro.spectral, and wires the tuned series into the requested
+    estimation mode.  Returns (operator, DilationPlan); the operator is
+    deterministic for "exact_edges" and keyed op(key, V) for
+    "minibatch".  `budget` caps the matvecs one operator application may
+    spend (the series degree).
+    """
+    from repro import spectral  # deferred: spectral builds on core
+
+    probe, plan = spectral.probe_and_plan(
+        g, k=k, key=key, budget=budget,
+        num_probes=num_probes, num_steps=num_steps)
+    del probe
+    s = spectral.series_from_plan(plan)
+    if estimation == "exact_edges":
+        return series_operator(s, edge_matvec(g)), plan
+    if estimation == "minibatch":
+        return minibatch_operator(g, s, batch_edges), plan
+    raise ValueError(f"unknown estimation mode {estimation!r}")

@@ -1,0 +1,54 @@
+"""Spectral probing & dilation planning — the "stochastic" half of the
+paper's title as a first-class subsystem.
+
+The dilation transforms (core.series) only pay off when their free
+parameters — family, degree, per-graph scale, reversal shift — match the
+actual spectrum.  This package estimates that spectrum matrix-free with
+a handful of matvecs and turns the estimate into a tuned plan:
+
+Module map
+----------
+probes
+    jit-compiled, MatVec-convention spectral probes: Lanczos with full
+    reorthogonalization, stochastic Lanczos quadrature (tight
+    ``lambda_max`` + coarse spectral-density histogram + trace),
+    Girard-Hutchinson trace estimation (deterministic and minibatch
+    operators), and a counting-function bottom-edge eigengap localizer.
+    Node-padded operators (streaming capacity classes) probe as their
+    unpadded selves via the ``n_real`` mask.
+plan
+    Host-side planner: ``plan_dilation(probe, k, budget)`` selects the
+    transform family / degree / strength / reversal shift from the
+    probed spectrum, snapped onto a coarse grid so probe noise maps to
+    the same plan (and the compiled-program set stays small);
+    ``series_from_plan`` materializes it via the core.series
+    constructors.  The Gershgorin ``2*max_degree`` bound survives as cap
+    and jit-time fallback.
+
+Entry points: ``probe_and_plan(g, k)`` here,
+``repro.core.operators.planned_operator`` for a ready solver operator,
+``ClusteringConfig(transform="auto")`` for the full pipeline, and the
+streaming service probes on admission and drift re-solves by default.
+``benchmarks/bench_spectral.py`` measures probe cost vs solver
+iterations saved against oracle and fixed-config tuning.
+"""
+from repro.spectral.plan import (  # noqa: F401
+    TAU_GRID,
+    DilationPlan,
+    plan_dilation,
+    probe_and_plan,
+    series_from_plan,
+    wanted_decay_cap,
+)
+from repro.spectral.probes import (  # noqa: F401
+    ProbeResult,
+    bottom_edge,
+    eigenvalue_count,
+    hutchinson_trace,
+    lanczos,
+    probe_edge_arrays,
+    probe_from_eigenvalues,
+    probe_graph,
+    slq_probe,
+    spectral_density,
+)

@@ -13,8 +13,12 @@ eigenvector panel, and advances them with BATCHED jitted ticks:
     occupancy bucket changes (log2 many programs per class, ever).
   * The per-session operator is the dilated reversed Laplacian
     (I - c L)^degree — the paper's limit_neg_exp series with λ* = 0 —
-    with the dilation scale c = strength / (ρ_ub · degree) a TRACED
-    per-session input (different graphs, one program).
+    with the dilation scale c = strength / (ρ · degree) a TRACED
+    per-session input (different graphs, one program).  ρ is the SLQ
+    lambda_max estimate (repro.spectral), probed on admission and on
+    drift-triggered re-solves and capped by the Gershgorin
+    2·max-degree bound; the bound alone anchors the scale when probing
+    is disabled.
   * Per-session convergence is the ground-truth-free panel residual;
     converged sessions leave the tick rotation, get their eigen estimate
     anchored (stream.updates), and serve labels until edge updates
@@ -41,6 +45,7 @@ import numpy as np
 from repro.core import kmeans as km
 from repro.core import laplacian as lap
 from repro.core import metrics, solvers
+from repro.spectral import probes as spectral_probes
 from repro.stream import graph_store as gs
 from repro.stream import tracking, updates, warm
 
@@ -70,6 +75,16 @@ class ServiceConfig:
     drop_trivial: bool = True  # skip the all-ones nullvector in embeddings
     kmeans_restarts: int = 8
     seed: int = 0
+    # SLQ spectral probing (repro.spectral): a tight lambda_max estimate
+    # replaces the Gershgorin 2*max_degree bound when setting the
+    # dilation scale — the bound over-estimates by ~2x on dense graphs,
+    # silently halving the dilation.  Probes run on session admission
+    # and on drift-triggered re-solves; ordinary update batches keep the
+    # cheap bound-only rescale.  The bound always survives as cap (it is
+    # certain; the probe is not) and as fallback when probing is off.
+    probe_spectrum: bool = True
+    probe_vectors: int = 2  # SLQ probe vectors per (re-)probe
+    probe_steps: int = 16  # Lanczos steps per probe vector
 
     def __post_init__(self):
         if self.degree % 2 == 0:
@@ -84,6 +99,9 @@ class _Session:
     store: gs.GraphStore
     v: jax.Array  # (node_cap, k) panel, zero rows >= n
     c: float  # dilation scale per matvec
+    rho: float  # spectral-radius estimate anchoring c (probed or bound)
+    rho_ub: float  # Gershgorin bound at the time rho was set
+    tau: float  # effective dilation strength (config, capped per probe)
     tracker: tracking.LabelTracker
     est: updates.EigenEstimate | None = None
     converged: bool = False
@@ -136,6 +154,70 @@ class StreamingService:
         self._sessions: dict[str, _Session] = {}
         self._compiled: dict[tuple, object] = {}
         self._admitted = 0
+        self._probes_run = 0
+
+    # ------------------------------------------------------------------
+    # spectral probing
+    # ------------------------------------------------------------------
+
+    def _rho_estimate(self, store: gs.GraphStore, n: int
+                      ) -> tuple[gs.GraphStore, float, float, float | None]:
+        """(refreshed store, rho, rho_ub, lam_k) — the dilation anchors.
+
+        rho is the SLQ lambda_max estimate capped by the Gershgorin
+        bound (the bound is certain, the probe is not); with probing
+        disabled — or a degenerate probe — it IS the bound, which keeps
+        this path jit-friendly and dependency-free.  lam_k is the probed
+        k-th-smallest eigenvalue (None without a probe), feeding the
+        planner's over-dilation cap in `_set_scale`.  Probe compiles are
+        shared per capacity class (fixed edge/node shapes, traced n).
+        """
+        cfg = self.cfg
+        store, rho_ub = gs.spectral_radius_upper_bound(store)
+        rho_ub = float(rho_ub)
+        rho = rho_ub
+        lam_k = None
+        if cfg.probe_spectrum and n > 1:
+            self._probes_run += 1
+            probe = spectral_probes.probe_edge_arrays(
+                store.src, store.dst, store.weight,
+                jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 7),
+                                   self._probes_run),
+                jnp.asarray(n, jnp.int32),
+                num_nodes=store.num_nodes,
+                num_probes=cfg.probe_vectors,
+                # NOT clamped to n: probe_steps is jit-static, and the
+                # Lanczos recurrence handles m >= n via sticky breakdown,
+                # so the compile stays shared across the capacity class.
+                num_steps=cfg.probe_steps,
+            )
+            est = float(probe.lambda_max)
+            if np.isfinite(est) and est > 0.0:
+                rho = min(est, rho_ub)
+                lam_k = spectral_probes.bottom_edge(probe, cfg.k)[0]
+        return store, rho, rho_ub, lam_k
+
+    def _set_scale(self, sess: _Session, rho: float, rho_ub: float,
+                   lam_k: float | None = None) -> None:
+        """Per-session dilation scale c = tau / (rho * degree).
+
+        tau is the configured strength, re-planned down by the spectral
+        planner's wanted-decay cap when a probe localized lam_k (a tight
+        rho would otherwise DOUBLE the effective strength the constants
+        were tuned for, over-dilating tenants whose wanted spread is a
+        sizable fraction of rho); floored so dilation never vanishes.
+        Without fresh probe information (ordinary update batches) the
+        session's last planned tau carries over.
+        """
+        from repro.spectral.plan import TAU_GRID, wanted_decay_cap
+
+        if lam_k is not None and rho > 0.0:
+            tau = self.cfg.dilation_strength
+            sess.tau = max(min(tau, wanted_decay_cap(lam_k, rho)),
+                           min(tau, TAU_GRID[0]))
+        sess.rho = rho
+        sess.rho_ub = rho_ub
+        sess.c = float(sess.tau / (max(rho, 1e-30) * self.cfg.degree))
 
     # ------------------------------------------------------------------
     # admission / eviction
@@ -157,7 +239,7 @@ class StreamingService:
         node_cap = node_capacity_class(g.num_nodes)
         store = gs.from_edge_list(g, capacity=edge_capacity,
                                   num_nodes=node_cap)
-        store, rho = gs.spectral_radius_upper_bound(store)
+        store, rho, rho_ub, lam_k = self._rho_estimate(store, g.num_nodes)
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
                                  self._admitted)
         self._admitted += 1
@@ -167,10 +249,13 @@ class StreamingService:
             num_clusters=clusters,
             store=store,
             v=_init_panel(key, node_cap, g.num_nodes, cfg.k),
-            c=float(cfg.dilation_strength / (max(float(rho), 1e-30)
-                                             * cfg.degree)),
+            c=0.0,
+            rho=rho,
+            rho_ub=rho_ub,
+            tau=cfg.dilation_strength,
             tracker=tracking.LabelTracker(clusters),
         )
+        self._set_scale(sess, rho, rho_ub, lam_k)
         sess.solves = 1  # the admission cold solve
         self._sessions[sid] = sess
 
@@ -207,10 +292,17 @@ class StreamingService:
             # tick joins a different group.
             base = gs.grow(base)
             store, dw, stats = gs.apply_edge_batch(base, batch, mode=mode)
-        store, rho = gs.spectral_radius_upper_bound(store)
+        # Ordinary batches rescale cheaply: track the probed estimate by
+        # the Gershgorin bound's relative change (no probe matvecs), cap
+        # by the fresh bound.  Full re-probes happen on admission and on
+        # the drift-triggered re-solve below.
+        store, rho_ub = gs.spectral_radius_upper_bound(store)
+        rho_ub_new = float(rho_ub)
         sess.store = store
-        sess.c = float(cfg.dilation_strength
-                       / (max(float(rho), 1e-30) * cfg.degree))
+        rho_new = min(
+            rho_ub_new,
+            sess.rho * rho_ub_new / max(sess.rho_ub, 1e-30))
+        self._set_scale(sess, rho_new, rho_ub_new)
         if sess.est is not None:
             prev_v = sess.est.v
             est, drift_flag = updates.update_or_flag(
@@ -234,14 +326,22 @@ class StreamingService:
                 sess.est = _anchor_estimate(st.src, st.dst, st.weight,
                                             sess.v)
                 return stats
-            # Full SPED re-solve.  A first-order update outside its
-            # validity region can be WORSE than the stale panel, so seed
-            # from whichever candidate has the lower residual under the
-            # new operator; go cold when even that fails the restart
-            # test (stream.warm).
+            # Full SPED re-solve.  The accumulated drift that invalidated
+            # the panel also staled the admission-time lambda_max, so
+            # RE-PROBE the spectrum and re-anchor the dilation scale
+            # before deciding how to seed the solve.  A first-order
+            # update outside its validity region can be WORSE than the
+            # stale panel, so seed from whichever candidate has the
+            # lower residual under the new (re-probed) operator; go cold
+            # when even that fails the restart test (stream.warm).
             sess.fallbacks += 1
             sess.est = None
             sess.converged = False
+            st2, rho2, rho_ub2, lam_k2 = self._rho_estimate(
+                sess.store, sess.n)
+            sess.store = st2
+            self._set_scale(sess, rho2, rho_ub2, lam_k2)
+            res = float(self._residual(sess))  # est.v under re-probed op
             sess.v = prev_v
             res_prev = float(self._residual(sess))
             if res <= res_prev:
@@ -399,6 +499,9 @@ class StreamingService:
             "num_edges": int(gs.num_edges(sess.store)),
             "converged": sess.converged,
             "residual": sess.residual,
+            "rho": sess.rho,
+            "rho_ub": sess.rho_ub,
+            "tau": sess.tau,
             "ticks": sess.ticks,
             "solves": sess.solves,
             "incremental_updates": sess.incremental_updates,
