@@ -1,25 +1,47 @@
-"""Pallas kernel micro-benchmarks.
+"""Pallas kernel benchmarks: per-kernel micro rows plus backend-vs-
+segment END-TO-END solve timings, tracked in BENCH_kernels.json.
 
-CPU caveat: pallas kernels execute via interpret=True on CPU (a Python
-interpreter of the kernel body) so absolute numbers are NOT TPU
-projections; the jnp reference path is timed as the comparable baseline
-and the derived column records the kernel/ref allclose delta (the perf
-claims live in the roofline analysis, not here)."""
+CPU caveat: pallas kernels execute via interpret=True on CPU (the kernel
+body lowered through a grid loop) so absolute pallas numbers are NOT TPU
+projections; the segment path is timed as the comparable baseline and
+the derived column records the cross-backend max-abs delta (the perf
+claims live in the roofline analysis, not here).  What this file tracks
+across PRs is (a) that the pallas path stays numerically glued to
+segment end-to-end, and (b) the segment hot-path trajectory; on TPU the
+same harness times the real kernels.
+
+The solve rows run the full operator -> solver pipeline on two graph
+sizes: one inside the one-hot kernel's VMEM limit and one ABOVE the old
+ONE_HOT_NODE_LIMIT (4096) ceiling, exercising the node-blocked layout.
+"""
 from __future__ import annotations
+
+import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import time_call, write_bench_json
+from repro.core import backend as backend_mod
+from repro.core import graphs, operators, solvers
+from repro.core import laplacian as lap
+from repro.core.series import limit_neg_exp
 from repro.kernels.edge_spmm import ops as es_ops, ref as es_ref
 from repro.kernels.eg_update import ops as eg_ops, ref as eg_ref
 from repro.kernels.laplacian_poly import ops as lp_ops, ref as lp_ref
 
+# (tag, n, avg_deg_in, series degree, solver steps); n=9216 sits above
+# backend.ONE_HOT_NODE_LIMIT (4096) => node-blocked path.
+SOLVE_SIZES = (
+    ("n2048", 2048, 4.0, 7, 4),
+    ("n9216", 9216, 3.0, 5, 2),
+)
 
-def run():
+
+def _micro_rows(key):
     rows = []
-    key = jax.random.PRNGKey(0)
     n, k = 512, 8
     l_mat = jax.random.normal(key, (n, n)) / 32
     u = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
@@ -42,6 +64,13 @@ def run():
     rows.append(("kernels/edge_spmm_ref_e4096", round(us, 1),
                  f"kernel_maxerr={err:.2g}"))
 
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=128)
+    nb_fn = lambda: es_ops.edge_spmm_blocked(nb, u, interpret=True)
+    us = time_call(nb_fn, iters=5)
+    err = float(jnp.max(jnp.abs(nb_fn() - ref_fn())))
+    rows.append(("kernels/edge_spmm_nb_e4096", round(us, 1),
+                 f"kernel_maxerr={err:.2g},chunks={nb.chunks_per_block}"))
+
     v = u / jnp.linalg.norm(u, axis=0, keepdims=True)
     av = jax.random.normal(jax.random.fold_in(key, 5), (n, k))
     ref_fn = jax.jit(lambda: eg_ref.mu_eg_update(v, av, 0.05))
@@ -50,6 +79,79 @@ def run():
     err = float(jnp.max(jnp.abs(kout - ref_fn())))
     rows.append(("kernels/eg_update_ref_n512", round(us, 1),
                  f"kernel_maxerr={err:.2g}"))
+    return rows
+
+
+def _solve_rows():
+    """End-to-end: tuned-series operator -> mu-EG solve, per backend.
+
+    Two numbers per (size, backend): the WARM jitted operator
+    application (the solve hot path — one full series of fused matvecs
+    over the panel; this is the trajectory tracked across PRs) and one
+    cold full-solve wall time (jit + `steps` solver steps; run_solver
+    re-traces per call, so repeating it would time the compiler, not
+    the solve).
+    """
+    rows = []
+    extra = {}
+    for tag, n, deg_in, degree, steps in SOLVE_SIZES:
+        g, _ = graphs.sparse_sbm_graph(n, 4, avg_degree_in=deg_in,
+                                       avg_degree_out=0.5, seed=0)
+        rho = float(lap.spectral_radius_upper_bound(g))
+        s = limit_neg_exp(degree, scale=8.0 / rho)
+        cfg_base = solvers.SolverConfig(
+            method="mu_eg", lr=0.3, steps=steps, eval_every=max(steps, 1),
+            k=6, seed=0)
+        v0 = jax.random.normal(jax.random.PRNGKey(1), (n, cfg_base.k))
+        results = {}
+        for b in ("segment", "pallas"):
+            op_jit = jax.jit(operators.edge_series_operator(g, s, backend=b))
+            op_us = time_call(op_jit, v0, iters=3)
+            cfg = dataclasses.replace(cfg_base, backend=b)
+            t0 = time.perf_counter()
+            state, _ = solvers.run_solver(
+                operators.edge_series_operator(g, s, backend=b), n, cfg)
+            v_final = jax.block_until_ready(state.v)
+            solve_cold_s = time.perf_counter() - t0
+            results[b] = (op_us, solve_cold_s, v_final)
+        delta = float(jnp.max(jnp.abs(results["segment"][2]
+                                      - results["pallas"][2])))
+        for b in ("segment", "pallas"):
+            op_us, solve_cold_s, _ = results[b]
+            mode = ("interpret" if b == "pallas"
+                    and backend_mod.kernel_interpret() else "native")
+            rows.append((
+                f"kernels/op_apply_{tag}_{b}", round(op_us, 1),
+                f"degree={degree},mode={mode},"
+                f"xbackend_maxerr={delta:.2g}"))
+            rows.append((
+                f"kernels/solve_cold_{tag}_{b}",
+                round(solve_cold_s * 1e6, 1),
+                f"steps={steps},incl_compile=1,mode={mode}"))
+        extra[tag] = {
+            "n": n,
+            "num_edges": int(g.num_edges),
+            "degree": degree,
+            "solver_steps": steps,
+            "node_blocked": n > backend_mod.ONE_HOT_NODE_LIMIT,
+            "op_apply_us_segment": results["segment"][0],
+            "op_apply_us_pallas": results["pallas"][0],
+            "solve_cold_s_segment": results["segment"][1],
+            "solve_cold_s_pallas": results["pallas"][1],
+            "cross_backend_maxerr": delta,
+        }
+    return rows, extra
+
+
+def run():
+    rows = _micro_rows(jax.random.PRNGKey(0))
+    solve_rows, extra = _solve_rows()
+    rows += solve_rows
+    write_bench_json("kernels", rows, extra={
+        "solves": extra,
+        "pallas_mode": ("interpret" if backend_mod.kernel_interpret()
+                        else "native"),
+    })
     return rows
 
 

@@ -1,9 +1,9 @@
 """Benchmark harness: one module per paper table/figure.  Prints
 ``name,us_per_call,derived`` CSV rows (and nothing else on stdout).
 
-Modules with cross-PR perf trajectories (bench_spectral, bench_stream)
-additionally write machine-readable ``BENCH_<name>.json`` files at the
-repo root via :func:`benchmarks.common.write_bench_json`."""
+Modules with cross-PR perf trajectories (bench_spectral, bench_stream,
+bench_kernels) additionally write machine-readable ``BENCH_<name>.json``
+files at the repo root via :func:`benchmarks.common.write_bench_json`."""
 from __future__ import annotations
 
 import sys

@@ -8,4 +8,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # cheap): a regression in the spectral probes invalidates every
 # downstream auto-tuned result, so fail fast on it.
 python -m pytest -q -m "stochastic and not slow"
-exec python -m pytest -q -m "not slow and not stochastic" "$@"
+# Kernel/backend equivalence next (interpret-mode pallas == segment):
+# a kernel regression silently corrupts every pallas-backend solve.
+python -m pytest -q -m "pallas and not slow"
+exec python -m pytest -q -m "not slow and not stochastic and not pallas" "$@"

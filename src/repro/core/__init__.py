@@ -28,13 +28,22 @@ from repro.core.series import (  # noqa: F401
     taylor_neg_exp,
     with_lambda_star,
 )
+from repro.core.backend import (  # noqa: F401
+    BACKENDS,
+    NodeBlocking,
+    build_node_blocking,
+    kernel_interpret,
+    resolve_backend,
+)
 from repro.core.solvers import (  # noqa: F401
     SolverConfig,
     SolverState,
     Trace,
     init_from_panel,
     init_state,
+    make_step_fn,
     mu_eg_step,
+    mu_eg_step_fused,
     oja_step,
     run_solver,
     steps_to_streak,

@@ -37,6 +37,9 @@ class ClusteringConfig:
     drop_trivial: bool = True  # skip the all-ones nullvector in the embedding
     kmeans_restarts: int = 8
     seed: int = 0
+    # matvec/solver-step kernels (repro.core.backend): auto | segment |
+    # pallas.  auto = pallas on TPU, segment elsewhere.
+    backend: str = "auto"
 
 
 def build_series(cfg: ClusteringConfig, rho_ub: float) -> series.SpectralSeries:
@@ -66,31 +69,35 @@ def spectral_cluster(
     rho_ub = float(lap.spectral_radius_upper_bound(g))
     k = cfg.num_clusters + cfg.extra_eigvecs + (1 if cfg.drop_trivial else 0)
     plan = None
-    if cfg.transform == "auto":
+    if cfg.transform == "auto" and cfg.estimation != "walks":
         from repro import spectral  # deferred: spectral builds on core
 
         _, plan = spectral.probe_and_plan(
-            g, k=k, key=jax.random.PRNGKey(cfg.seed + 3), budget=cfg.degree)
+            g, k=k, key=jax.random.PRNGKey(cfg.seed + 3), budget=cfg.degree,
+            backend=cfg.backend)
         s = spectral.series_from_plan(plan)
-        if cfg.estimation != "walks":
-            # solver steps are not scale-invariant; renormalize the
-            # user's lr (tuned for unit-scale series) to the planned
-            # operator's scale.  The walks estimator builds its own
-            # unit-scale operator below and ignores the planned series,
-            # so its lr must stay untouched.
-            cfg = dataclasses.replace(
-                cfg, solver=dataclasses.replace(
-                    cfg.solver, lr=plan.suggested_lr(cfg.solver.lr)))
+        # solver steps are not scale-invariant; renormalize the user's
+        # lr (tuned for unit-scale series) to the planned operator's
+        # scale.
+        cfg = dataclasses.replace(
+            cfg, solver=dataclasses.replace(
+                cfg.solver, lr=plan.suggested_lr(cfg.solver.lr)))
+    elif cfg.transform == "auto":
+        # the walks estimator builds its own low-degree operator below
+        # and ignores any planned series — don't pay the probe for a
+        # plan that would be discarded (s only supplies info["series"])
+        s = series.with_lambda_star(series.identity_series(), rho_ub * 1.01)
     else:
         s = build_series(cfg, rho_ub)
-    scfg = dataclasses.replace(cfg.solver, k=k, seed=cfg.seed)
+    scfg = dataclasses.replace(cfg.solver, k=k, seed=cfg.seed,
+                               backend=cfg.backend)
 
-    mv = operators.edge_matvec(g)
     if cfg.estimation == "exact_edges":
-        op = operators.series_operator(s, mv)
+        op = operators.edge_series_operator(g, s, backend=cfg.backend)
         stochastic = False
     elif cfg.estimation == "minibatch":
-        op = operators.minibatch_operator(g, s, cfg.batch_edges)
+        op = operators.minibatch_operator(g, s, cfg.batch_edges,
+                                          backend=cfg.backend)
         stochastic = True
     elif cfg.estimation == "walks":
         from repro.core import walks as walks_mod

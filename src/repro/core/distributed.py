@@ -43,18 +43,41 @@ def pad_edges_for_mesh(g: EdgeList, num_shards: int) -> EdgeList:
     return lap_mod.pad_edge_list(g, e + ((-e) % num_shards))
 
 
-def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",)):
+def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",),
+                             backend: str = "auto",
+                             num_nodes: int | None = None):
     """Returns matvec(src, dst, w, v) -> L @ v with edges sharded over
-    `edge_axes` and v replicated; one psum over the edge axes."""
+    `edge_axes` and v replicated; one psum over the edge axes.
+
+    ``backend`` (repro.core.backend) swaps the PER-SHARD local matvec —
+    jnp gather/scatter vs the Pallas one-hot incidence SpMM — while the
+    psum contract (one (n, k) panel reduction per matvec) is unchanged.
+    The panel is replicated, so the per-shard kernel sees the full n and
+    the one-hot VMEM guard (``resolve_for_arrays``) applies: past the
+    node limit the shard matvec degrades to segment (per-shard node
+    blockings are a ROADMAP follow-up).  Pass ``num_nodes`` to resolve
+    that guard up front — it also keeps shard_map's replication check
+    on when the resolution lands on segment; without it the check must
+    be disabled pessimistically (pallas_call has no replication rule).
+    """
+    from repro.core import backend as backend_mod
+
     spec_e = P(edge_axes)
     spec_v = P()
+    b = backend_mod.resolve_backend(backend)
+    if num_nodes is not None:
+        b = backend_mod.resolve_for_arrays(b, num_nodes)
+    interp = backend_mod.kernel_interpret()
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(spec_e, spec_e, spec_e, spec_v),
-        out_specs=spec_v)
+        out_specs=spec_v,
+        # the explicit psum below makes the output replication manifest
+        check_vma=b != "pallas")
     def mv(src, dst, w, v):
-        out = lap_mod.edge_matvec_arrays(src, dst, w, v)
+        out = backend_mod.edge_arrays_matvec_fn(
+            src, dst, w, b, num_nodes=v.shape[0], interpret=interp)(v)
         return jax.lax.psum(out, edge_axes)
 
     return mv
@@ -65,17 +88,19 @@ def distributed_series_operator(
     g: EdgeList,
     series: SpectralSeries,
     edge_axes=("data",),
+    backend: str = "auto",
 ):
     """Deterministic distributed operator: V -> (lambda* I - S(L)) V.
 
     Edges are padded + sharded once; each of the series' `degree` matvecs
-    costs one psum of the (n, k) panel.
+    costs one psum of the (n, k) panel (per-shard kernel per `backend`).
     """
     num_shards = 1
     for a in edge_axes:
         num_shards *= mesh.shape[a]
     gp = pad_edges_for_mesh(g, num_shards)
-    mv = sharded_laplacian_matvec(mesh, edge_axes)
+    mv = sharded_laplacian_matvec(mesh, edge_axes, backend=backend,
+                                  num_nodes=g.num_nodes)
 
     def op(v: jax.Array) -> jax.Array:
         return series.apply_reversed(

@@ -145,10 +145,9 @@ def minibatch_laplacian_matvec(
     optimization model of the paper (Sec. 3): batches of edge vectors x_e.
     """
     b = src.shape[0]
-    diff = v[src] - v[dst]
-    wdiff = (weight * (num_edges_total / b))[:, None] * jnp.atleast_2d(diff.T).T
-    if v.ndim == 1:
-        wdiff = wdiff[:, 0]
+    diff = v[src] - v[dst]  # (B,) or (B, K), matching v's rank
+    scaled = weight * (num_edges_total / b)
+    wdiff = scaled * diff if diff.ndim == 1 else scaled[:, None] * diff
     out = jnp.zeros_like(v)
     out = out.at[src].add(wdiff)
     out = out.at[dst].add(-wdiff)

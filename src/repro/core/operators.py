@@ -15,6 +15,11 @@ Estimation modes:
                      (the paper's stochastic optimization model, Sec. 3)
   * walks          — the Sec. 4.3 random-walk estimator of L^l, see
                      :mod:`repro.core.walks`
+
+Every constructor accepts ``backend`` (``"auto"|"segment"|"pallas"``,
+see :mod:`repro.core.backend`): the inner Laplacian matvec runs either
+as the jnp gather/scatter or as the Pallas incidence-SpMM kernels, with
+series steps fused into the kernel epilogue on the pallas path.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.core import laplacian as lap
 from repro.core.series import SpectralSeries
 
@@ -34,13 +40,38 @@ def dense_matvec(l_mat: jax.Array) -> MatVec:
     return lambda v: l_mat @ v
 
 
-def edge_matvec(g: lap.EdgeList) -> MatVec:
-    return functools.partial(lap.laplacian_matvec, g)
+def edge_matvec(g: lap.EdgeList, backend: str = "auto",
+                blocking: backend_mod.NodeBlocking | None = None) -> MatVec:
+    """V -> L @ V on the selected backend (node-blocked kernel auto-built
+    for pallas when n exceeds the one-hot VMEM limit)."""
+    return backend_mod.laplacian_matvec_fn(g, backend, blocking)
 
 
-def series_operator(series: SpectralSeries, matvec: MatVec) -> MatVec:
-    """V -> (lambda* I - S(L)) V, deterministic."""
+def series_operator(series: SpectralSeries, matvec: MatVec,
+                    fused_step: backend_mod.FusedStep | None = None) -> MatVec:
+    """V -> (lambda* I - S(L)) V, deterministic.
+
+    ``fused_step`` (from :func:`repro.core.backend.fused_step_fn`)
+    switches the series onto its fused evaluator — each recurrence step
+    is one kernel call with the AXPY in the epilogue.
+    """
+    if fused_step is not None:
+        return lambda v: series.apply_reversed_fused(fused_step, v)
     return lambda v: series.apply_reversed(matvec, v)
+
+
+def edge_series_operator(
+    g: lap.EdgeList,
+    series: SpectralSeries,
+    backend: str = "auto",
+    blocking: backend_mod.NodeBlocking | None = None,
+) -> MatVec:
+    """The exact_edges operator: series over the edge-list matvec on the
+    selected backend (fused series steps on pallas)."""
+    fused = backend_mod.fused_step_fn(g, backend, blocking)
+    if fused is not None:
+        return series_operator(series, None, fused_step=fused)
+    return series_operator(series, edge_matvec(g, backend="segment"))
 
 
 def exact_operator(series_or_transform, l_mat: jax.Array) -> MatVec:
@@ -64,6 +95,7 @@ def minibatch_operator(
     g: lap.EdgeList,
     series: SpectralSeries,
     batch_edges: int,
+    backend: str = "auto",
 ) -> Callable[[jax.Array, jax.Array], jax.Array]:
     """Stochastic operator: each inner Laplacian matvec uses an
     independent uniform minibatch of edges (unbiased for L, and since
@@ -71,12 +103,26 @@ def minibatch_operator(
     E[L_b1 ... L_bi] = L^i is unbiased — the product of independent
     unbiased factors).
 
+    The minibatch is re-drawn per matvec, so there is no precomputed
+    node blocking: the pallas path uses the one-hot incidence kernel
+    (which IS the minibatch kernel of DESIGN.md Sec. 3) and falls back
+    to segment beyond its n limit.  Both backends draw the SAME edges
+    for the same key — only the SpMM implementation differs.
+
     Returns op(key, V).
     """
     e = g.num_edges
+    b = backend_mod.resolve_for_arrays(backend, g.num_nodes)
+    interp = backend_mod.kernel_interpret()
+    scale = e / batch_edges
 
     def keyed_mv(k: jax.Array, u: jax.Array) -> jax.Array:
         sel = jax.random.randint(k, (batch_edges,), 0, e)
+        if b == "pallas":
+            from repro.kernels.edge_spmm import ops as es_ops
+            return es_ops.edge_spmm(
+                g.src[sel], g.dst[sel], g.weight[sel] * scale, u,
+                interpret=interp)
         return lap.minibatch_laplacian_matvec(
             g.src[sel], g.dst[sel], g.weight[sel], u, e)
 
@@ -118,6 +164,7 @@ def planned_operator(
     batch_edges: int = 1024,
     num_probes: int = 4,
     num_steps: int = 24,
+    backend: str = "auto",
 ):
     """Probe the graph's spectrum and build an auto-tuned solver operator.
 
@@ -127,17 +174,18 @@ def planned_operator(
     estimation mode.  Returns (operator, DilationPlan); the operator is
     deterministic for "exact_edges" and keyed op(key, V) for
     "minibatch".  `budget` caps the matvecs one operator application may
-    spend (the series degree).
+    spend (the series degree).  ``backend`` selects the matvec kernels
+    for BOTH the probes and the solve operator.
     """
     from repro import spectral  # deferred: spectral builds on core
 
     probe, plan = spectral.probe_and_plan(
         g, k=k, key=key, budget=budget,
-        num_probes=num_probes, num_steps=num_steps)
+        num_probes=num_probes, num_steps=num_steps, backend=backend)
     del probe
     s = spectral.series_from_plan(plan)
     if estimation == "exact_edges":
-        return series_operator(s, edge_matvec(g)), plan
+        return edge_series_operator(g, s, backend=backend), plan
     if estimation == "minibatch":
-        return minibatch_operator(g, s, batch_edges), plan
+        return minibatch_operator(g, s, batch_edges, backend=backend), plan
     raise ValueError(f"unknown estimation mode {estimation!r}")

@@ -38,6 +38,12 @@ MatVec = Callable[[jax.Array], jax.Array]
 # PRNG key so every monomial factor uses a fresh, independent minibatch
 # (required for the unbiasedness argument of paper Sec. 4.3).
 IndexedMatVec = Callable[[jax.Array, jax.Array], jax.Array]
+# Fused-step convention: fused(u, alpha, beta) -> alpha * (L @ u) + beta * u
+# in ONE pass over the panel (repro.core.backend folds the AXPY into the
+# Pallas SpMM epilogue).  Every Table-2 recurrence step is such an affine,
+# so series that define ``fused_apply_fn`` evaluate with zero extra panel
+# round-trips between the matvec and its AXPY.
+FusedStep = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,9 +60,24 @@ class SpectralSeries:
     apply_fn: Callable[[IndexedMatVec, jax.Array], jax.Array]
     scalar_fn: Callable[[jax.Array], jax.Array]
     lambda_star: float = 0.0
+    # Optional fused evaluator: (FusedStep, v) -> S(L) v with each
+    # recurrence step's affine folded into one backend call.  None =>
+    # ``apply_fused`` falls back to the classic recurrence, deriving the
+    # plain matvec as fused(u, 1, 0).
+    fused_apply_fn: Callable[[FusedStep, jax.Array], jax.Array] | None = None
 
     def apply(self, matvec: MatVec, v: jax.Array) -> jax.Array:
         return self.apply_fn(lambda i, u: matvec(u), v)
+
+    def apply_fused(self, fused_step: FusedStep, v: jax.Array) -> jax.Array:
+        """S(L) v with alpha*Lu+beta*u steps fused into the matvec."""
+        if self.fused_apply_fn is None:
+            return self.apply_fn(lambda i, u: fused_step(u, 1.0, 0.0), v)
+        return self.fused_apply_fn(fused_step, v)
+
+    def apply_reversed_fused(self, fused_step: FusedStep,
+                             v: jax.Array) -> jax.Array:
+        return self.lambda_star * v - self.apply_fused(fused_step, v)
 
     def apply_stochastic(self, keyed_matvec, key: jax.Array,
                          v: jax.Array) -> jax.Array:
@@ -107,6 +128,11 @@ def limit_neg_exp(degree: int, scale: float = 1.0) -> SpectralSeries:
             return u - c * mv(i, u)
         return -jax.lax.fori_loop(0, degree, body, v)
 
+    def fused_apply_fn(fs: FusedStep, v: jax.Array) -> jax.Array:
+        def body(i, u):
+            return fs(u, -c, 1.0)  # u - c (L u), one fused pass
+        return -jax.lax.fori_loop(0, degree, body, v)
+
     def scalar_fn(lam):
         return -((1.0 - c * lam) ** degree)
 
@@ -114,6 +140,7 @@ def limit_neg_exp(degree: int, scale: float = 1.0) -> SpectralSeries:
         name=f"limit_neg_exp_d{degree}" + ("" if scale == 1.0 else f"_s{scale:g}"),
         degree=degree, apply_fn=apply_fn, scalar_fn=scalar_fn,
         lambda_star=0.0,  # series < ... <= max 0-ish; top-k solver safe with 0
+        fused_apply_fn=fused_apply_fn,
     )
 
 
@@ -131,6 +158,14 @@ def taylor_neg_exp(degree: int) -> SpectralSeries:
             1, degree + 1, body, (v, v))
         return -acc
 
+    def fused_apply_fn(fs: FusedStep, v: jax.Array) -> jax.Array:
+        def body(i, carry):
+            term, acc = carry
+            term = fs(term, -1.0 / i.astype(v.dtype), 0.0)  # -(L t)/i
+            return term, acc + term
+        _, acc = jax.lax.fori_loop(1, degree + 1, body, (v, v))
+        return -acc
+
     def scalar_fn(lam):
         lam = jnp.asarray(lam)
         term = jnp.ones_like(lam)
@@ -143,6 +178,7 @@ def taylor_neg_exp(degree: int) -> SpectralSeries:
     return SpectralSeries(
         name=f"taylor_neg_exp_d{degree}", degree=degree,
         apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=0.0,
+        fused_apply_fn=fused_apply_fn,
     )
 
 
@@ -166,6 +202,15 @@ def taylor_log(degree: int, eps: float = 1e-2,
         _, acc = jax.lax.fori_loop(1, degree + 1, body, (v, jnp.zeros_like(v)))
         return acc
 
+    def fused_apply_fn(fs: FusedStep, v: jax.Array) -> jax.Array:
+        def body(i, carry):
+            m, acc = carry
+            m = fs(m, 1.0, a)  # M m = L m + a m, one fused pass
+            sign = jnp.where(i % 2 == 1, 1.0, -1.0).astype(v.dtype)
+            return m, acc + (sign / i.astype(v.dtype)) * m
+        _, acc = jax.lax.fori_loop(1, degree + 1, body, (v, jnp.zeros_like(v)))
+        return acc
+
     def scalar_fn(lam):
         lam = jnp.asarray(lam)
         m = jnp.ones_like(lam)
@@ -178,6 +223,7 @@ def taylor_log(degree: int, eps: float = 1e-2,
     return SpectralSeries(
         name=f"taylor_log_d{degree}_eps{eps:g}", degree=degree,
         apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=lambda_star,
+        fused_apply_fn=fused_apply_fn,
     )
 
 
@@ -222,6 +268,19 @@ def chebyshev(
         return coeffs[0].astype(v.dtype) * v + t_op(
             jnp.asarray(degree, jnp.int32), b1) - b2
 
+    def fused_apply_fn(fs: FusedStep, v: jax.Array) -> jax.Array:
+        # Same Clenshaw recurrence with 2 t(L) b1 = fs(b1, 2a, 2b) — the
+        # affine map AND its doubling ride the SpMM epilogue.
+        def body(idx, carry):
+            b1, b2 = carry
+            k = degree - idx
+            bk = coeffs[k].astype(v.dtype) * v + fs(b1, 2.0 * alpha,
+                                                    2.0 * beta) - b2
+            return bk, b1
+        b1, b2 = jax.lax.fori_loop(
+            0, degree, body, (jnp.zeros_like(v), jnp.zeros_like(v)))
+        return coeffs[0].astype(v.dtype) * v + fs(b1, alpha, beta) - b2
+
     def scalar_fn(lam):
         lam = jnp.asarray(lam)
         t = alpha * lam + beta
@@ -236,6 +295,7 @@ def chebyshev(
     return SpectralSeries(
         name=f"{name}_d{degree}", degree=degree,
         apply_fn=apply_fn, scalar_fn=scalar_fn, lambda_star=lambda_star,
+        fused_apply_fn=fused_apply_fn,
     )
 
 

@@ -24,6 +24,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import metrics
 
@@ -87,7 +88,36 @@ def mu_eg_step(state: SolverState, av: jax.Array, lr: float) -> SolverState:
     return SolverState(v=vn, step=state.step + 1)
 
 
+def mu_eg_step_fused(state: SolverState, av: jax.Array, lr: float,
+                     *, interpret: bool = False) -> SolverState:
+    """mu-EigenGame step via the fused Pallas kernels: the update is the
+    linear combination V' = (V @ M1 + AV @ M2) * colscale with k x k
+    coefficient matrices from the gram of [V | AV]
+    (repro.kernels.eg_update.coefficient_matrices), so the whole step is
+    TWO panel passes (gram + mix) instead of ~7 elementwise/matmul
+    passes.  Same math as :func:`mu_eg_step` — the segment oracle."""
+    from repro.kernels.eg_update import ops as eg_ops
+
+    v = eg_ops.mu_eg_update(state.v, av, lr, interpret=interpret)
+    return SolverState(v=v, step=state.step + 1)
+
+
 STEP_FNS = {"oja": oja_step, "mu_eg": mu_eg_step}
+
+
+def make_step_fn(method: str, backend: str = "auto"):
+    """Solver step on the selected backend (repro.core.backend).
+
+    ``mu_eg`` + pallas selects the fused two-pass kernel step; ``oja``
+    has no kernel form (its QR retraction dominates) and stays on the
+    segment implementation for every backend.
+    """
+    from repro.core import backend as backend_mod
+
+    if method == "mu_eg" and backend_mod.resolve_backend(backend) == "pallas":
+        return functools.partial(
+            mu_eg_step_fused, interpret=backend_mod.kernel_interpret())
+    return STEP_FNS[method]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +128,7 @@ class SolverConfig:
     eval_every: int = 10
     k: int = 8
     seed: int = 0
+    backend: str = "auto"  # solver-step kernels: auto | segment | pallas
 
 
 class Trace(NamedTuple):
@@ -122,7 +153,7 @@ def run_solver(
     panel (orthonormalized via `init_from_panel`) instead of the default
     random init — the streaming service's reconvergence path.
     """
-    step_fn = STEP_FNS[cfg.method]
+    step_fn = make_step_fn(cfg.method, cfg.backend)
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
     if init_v is None:
@@ -160,7 +191,6 @@ def run_solver(
 
 def steps_to_tolerance(trace: Trace, tol: float) -> int:
     """First recorded step at which subspace error <= tol (or -1)."""
-    import numpy as np
     err = np.asarray(trace.subspace_error)
     idx = np.nonzero(err <= tol)[0]
     return int(np.asarray(trace.steps)[idx[0]]) if len(idx) else -1
@@ -168,7 +198,6 @@ def steps_to_tolerance(trace: Trace, tol: float) -> int:
 
 def steps_to_streak(trace: Trace, k: int) -> int:
     """First recorded step with a full-k eigenvector streak (or -1)."""
-    import numpy as np
     st = np.asarray(trace.streak)
     idx = np.nonzero(st >= k)[0]
     return int(np.asarray(trace.steps)[idx[0]]) if len(idx) else -1

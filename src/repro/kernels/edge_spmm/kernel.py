@@ -1,22 +1,48 @@
-"""Pallas TPU kernel: minibatch incidence SpMM  Y = X_b^T W_b (X_b V).
+"""Pallas TPU kernels: incidence SpMM  Y = X^T W (X V), one-hot and
+node-blocked variants, with a fused affine epilogue.
 
-The stochastic heart of SPED (paper Sec. 3/4.3): a minibatch of B edges
-defines incidence rows x_e (+1 at src, -1 at dst); the unbiased Laplacian
-estimate applied to the panel V is
+The stochastic heart of SPED (paper Sec. 3/4.3): a batch of E edges
+defines incidence rows x_e (+1 at src, -1 at dst); the Laplacian
+(estimate) applied to the panel V is
 
-    Y = sum_e w_e x_e (x_e^T V)  =  X_b^T diag(w) X_b V.
+    Y = sum_e w_e x_e (x_e^T V)  =  X^T diag(w) X V.
 
 GPU implementations scatter-add per edge.  TPUs have no efficient
-scatter, so the TPU-native adaptation (DESIGN.md Sec. 3) materializes the
-one-hot incidence BLOCK in VMEM and rides the MXU twice:
+scatter, so the TPU-native adaptation (DESIGN.md Sec. 3) materializes
+one-hot incidence BLOCKS in VMEM and rides the MXU:
+
+one-hot variant (``edge_spmm``, n <= ONE_HOT_NODE_LIMIT = 4096):
 
     X_blk = onehot(src) - onehot(dst)          (BE, n)   built via iota
     D     = X_blk @ V                           (BE, k)   MXU
     Y    += X_blk^T @ (w * D)                   (n, k)    MXU
 
 Grid over edge blocks; Y accumulates in the output ref.  V is assumed to
-fit VMEM (n x k panels with n <= ~8k, k <= 128 — the spectral-clustering
-regime; larger n uses the node-blocked variant in ops.py).
+fit VMEM (n x k panels with k <= 128; the backend layer caps this
+variant at n <= ONE_HOT_NODE_LIMIT = 4096 — the small-graph
+spectral-clustering regime).
+
+node-blocked variant (``edge_spmm_nb``, any n):
+
+    L v = deg * v - A v  decomposes the matvec into an elementwise
+    degree term and an adjacency SpMM.  Host code (ops.py) expands each
+    edge into two directed half-edges (u <- o, weight w), buckets them
+    by the node-block of the DESTINATION u, and pre-gathers the source
+    rows G = V[o].  The kernel then only ever holds a (block_n, k)
+    panel slice plus a (BE, block_n) LOCAL one-hot in VMEM:
+
+    out[b]  = deg[b] * V[b]                     (init, j == 0)
+    out[b] -= onehot(u_local)^T @ (w * G_chunk) (BE, block_n) MXU per chunk
+
+Both kernels end with the fused AFFINE EPILOGUE
+
+    out = alpha * (L V)_block + beta * V_block
+
+on the last grid step, which folds one series-recurrence step — the
+limit-series u <- u - c (L u) (alpha=-c, beta=1) or the Chebyshev/
+Clenshaw t(L) u = a L u + b u — into the SpMM so the panel never
+round-trips HBM between the matvec and the AXPY.  alpha=1, beta=0
+recovers the plain matvec.
 """
 from __future__ import annotations
 
@@ -27,8 +53,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _edge_spmm_kernel(src_ref, dst_ref, w_ref, v_ref, out_ref):
+def _edge_spmm_kernel(src_ref, dst_ref, w_ref, v_ref, ab_ref, out_ref):
     e = pl.program_id(0)
+    ne = pl.num_programs(0)
 
     @pl.when(e == 0)
     def _init():
@@ -44,14 +71,22 @@ def _edge_spmm_kernel(src_ref, dst_ref, w_ref, v_ref, out_ref):
     wd = w_ref[...][:, None] * d
     out_ref[...] += jnp.dot(x_blk.T, wd, preferred_element_type=jnp.float32)
 
+    @pl.when(e == ne - 1)
+    def _epilogue():
+        out_ref[...] = ab_ref[0] * out_ref[...] + ab_ref[1] * v_ref[...]
+
 
 def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
+              ab: jax.Array | None = None,
               *, block_e: int = 128, interpret: bool = False) -> jax.Array:
-    """Y = sum_e w_e x_e x_e^T V over the edge minibatch.  E % block_e == 0
-    (ops.py pads with zero-weight edges)."""
+    """Y = alpha * sum_e w_e x_e x_e^T V + beta * V over the edge batch.
+    ``ab`` is the (2,) [alpha, beta] epilogue (default [1, 0] == plain
+    matvec).  E % block_e == 0 (ops.py pads with zero-weight edges)."""
     e = src.shape[0]
     n, k = v.shape
     assert e % block_e == 0, (e, block_e)
+    if ab is None:
+        ab = jnp.asarray([1.0, 0.0], jnp.float32)
     grid = (e // block_e,)
     return pl.pallas_call(
         _edge_spmm_kernel,
@@ -61,8 +96,67 @@ def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
             pl.BlockSpec((block_e,), lambda i: (i,)),
             pl.BlockSpec((block_e,), lambda i: (i,)),
             pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((n, k), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
         interpret=interpret,
-    )(src, dst, w, v)
+    )(src, dst, w, v, ab)
+
+
+def _edge_spmm_nb_kernel(u_ref, w_ref, g_ref, deg_ref, v_ref, ab_ref,
+                         out_ref):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = deg_ref[...][:, None] * v_ref[...]
+
+    bn = out_ref.shape[0]
+    be = u_ref.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (be, bn), 1)
+    oh = (u_ref[...][:, None] == cols).astype(jnp.float32)  # local dest
+    out_ref[...] -= jnp.dot(
+        oh.T, w_ref[...][:, None] * g_ref[...],
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _epilogue():
+        out_ref[...] = ab_ref[0] * out_ref[...] + ab_ref[1] * v_ref[...]
+
+
+def edge_spmm_nb(u_local: jax.Array, w: jax.Array, gathered: jax.Array,
+                 deg: jax.Array, v: jax.Array, ab: jax.Array,
+                 *, block_n: int, block_e: int, chunks_per_block: int,
+                 interpret: bool = False) -> jax.Array:
+    """Node-blocked Y = alpha * (L V) + beta * V.
+
+    Half-edges are bucketed by destination node-block (uniform
+    ``chunks_per_block`` chunks per bucket, zero-weight padding), source
+    rows are pre-gathered into ``gathered`` = V[other], and per-block
+    degrees carry the diagonal term.  VMEM per grid step: one
+    (block_n, k) panel slice, one (block_e, k) gathered chunk, and the
+    (block_e, block_n) local one-hot — independent of total n.
+    """
+    np_, k = v.shape
+    nb = np_ // block_n
+    c = chunks_per_block
+    assert np_ % block_n == 0, (np_, block_n)
+    assert u_local.shape[0] == nb * c * block_e, (u_local.shape, nb, c)
+    grid = (nb, c)
+    return pl.pallas_call(
+        _edge_spmm_nb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda b, j: (b * c + j,)),
+            pl.BlockSpec((block_e,), lambda b, j: (b * c + j,)),
+            pl.BlockSpec((block_e, k), lambda b, j: (b * c + j, 0)),
+            pl.BlockSpec((block_n,), lambda b, j: (b,)),
+            pl.BlockSpec((block_n, k), lambda b, j: (b, 0)),
+            pl.BlockSpec((2,), lambda b, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda b, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), jnp.float32),
+        interpret=interpret,
+    )(u_local, w, gathered, deg, v, ab)

@@ -1,21 +1,51 @@
-"""jit'd wrapper for edge_spmm: pads edges to block multiples (zero weight
-=> no contribution) and lane-aligns the panel."""
+"""jit'd wrappers for the edge_spmm kernels.
+
+``edge_spmm`` pads edges to block multiples (zero weight => no
+contribution) and lane-aligns the panel; it holds the full (n, k) panel
+plus a (block_e, n) one-hot in VMEM, so the backend layer only selects
+it up to ``repro.core.backend.ONE_HOT_NODE_LIMIT`` (4096) nodes.
+
+``build_node_blocking`` + ``edge_spmm_blocked`` are the scalable path:
+edges are expanded host-side into directed half-edges (u <- o, w) and
+bucketed by the node-block of the destination u, with per-bucket chunk
+counts SNAPPED to powers of two so graphs of similar skew share one
+compiled program (the streaming store's capacity-class economics).  The
+kernel then works on (block_n, k) panel slices only — see kernel.py.
+"""
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.edge_spmm import kernel
 
 
+def _ab(alpha, beta) -> jax.Array:
+    a = jnp.asarray(alpha, jnp.float32).reshape(())
+    b = jnp.asarray(beta, jnp.float32).reshape(())
+    return jnp.stack([a, b])
+
+
 @functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
 def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
+              alpha=1.0, beta=0.0,
               *, block_e: int = 128, interpret: bool = False) -> jax.Array:
+    """alpha * (sum_e w_e x_e x_e^T V) + beta * V; default plain matvec.
+
+    Accepts (n,) or (n, k) panels (1-D round-trips through a column).
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
     e = src.shape[0]
     n, k = v.shape
-    pad_e = (-e) % block_e
+    # an edgeless input still needs one (inert) block: a zero-size grid
+    # is invalid, and the segment backend returns zeros there
+    pad_e = block_e if e == 0 else (-e) % block_e
     if pad_e:
         src = jnp.concatenate([src, jnp.zeros((pad_e,), src.dtype)])
         dst = jnp.concatenate([dst, jnp.ones((pad_e,), dst.dtype)])
@@ -24,5 +54,137 @@ def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
     pad_n = (-n) % 8  # sublane alignment
     vp = jnp.pad(v.astype(jnp.float32), ((0, pad_n), (0, pad_k)))
     out = kernel.edge_spmm(src, dst, w.astype(jnp.float32), vp,
+                           _ab(alpha, beta),
                            block_e=block_e, interpret=interpret)
+    out = out[:n, :k]
+    return out[:, 0] if squeeze else out
+
+
+class NodeBlocking(NamedTuple):
+    """Node-blocked half-edge layout for ``edge_spmm_blocked``.
+
+    Built host-side ONCE per graph (or per capacity-class admission in
+    the streaming graph store) and cached alongside the padded edge
+    buffers; every matvec/fused-series-step reuses it.  Arrays are
+    device-resident; the ints are static and part of the compile key.
+    """
+
+    u_local: jax.Array  # (NB*C*BE,) int32 — dest index local to its block
+    other: jax.Array  # (NB*C*BE,) int32 — global source node per half-edge
+    weight: jax.Array  # (NB*C*BE,) float32 — 0 => padding slot
+    deg: jax.Array  # (NB*block_n,) float32 — weighted degrees, row-padded
+    block_n: int  # nodes per block (static)
+    block_e: int  # half-edges per kernel chunk (static)
+    chunks_per_block: int  # C, uniform per bucket (static, pow2-snapped)
+    num_nodes: int  # real node count n (static); NB = ceil(n / block_n)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.deg.shape[0] // self.block_n
+
+    @property
+    def padded_nodes(self) -> int:
+        return self.deg.shape[0]
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1) — shared by the blocking's
+    chunk snapping here and the service's occupancy buckets."""
+    return 1 << max(int(np.ceil(np.log2(max(int(x), 1)))), 0)
+
+
+def build_node_blocking(src, dst, weight, num_nodes: int,
+                        *, block_n: int = 512, block_e: int = 128,
+                        snap_chunks: bool = True) -> NodeBlocking:
+    """Host-side (numpy) bucketing of edges by destination node-block.
+
+    Each undirected edge (s, d, w) becomes two half-edges — out[s] takes
+    +w*(v[s]-v[d]), out[d] takes +w*(v[d]-v[s]) — and L v = deg*v - A v
+    lets the kernel carry the v[u] part as a precomputed degree, so a
+    half-edge only records (u_local, other, w).  Zero-weight slots
+    (capacity padding in the streaming store) are DROPPED here: they are
+    inert anyway, and keeping them would pile the entire padding into
+    node-block 0 and destroy bucket uniformity.  Buckets are padded to a
+    uniform chunk count C (`snap_chunks` rounds C to a power of two so
+    the compile key — and therefore the compiled-program count — stays
+    logarithmic in graph skew).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    live = weight != 0.0
+    src, dst, weight = src[live], dst[live], weight[live]
+    nb = max((num_nodes + block_n - 1) // block_n, 1)
+    n_pad = nb * block_n
+    # directed half-edges: destination u, source o
+    u = np.concatenate([src, dst])
+    o = np.concatenate([dst, src])
+    w2 = np.concatenate([weight, weight])
+    blk = u // block_n
+    order = np.argsort(blk, kind="stable")  # deterministic layout
+    u, o, w2, blk = u[order], o[order], w2[order], blk[order]
+    counts = np.bincount(blk, minlength=nb)
+    c = max(int(np.ceil(counts.max(initial=0) / block_e)), 1)
+    if snap_chunks:
+        c = next_pow2(c)
+    ul = np.zeros((nb, c * block_e), np.int32)
+    ot = np.zeros((nb, c * block_e), np.int32)
+    wt = np.zeros((nb, c * block_e), np.float32)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for b in range(nb):
+        lo, hi = offs[b], offs[b + 1]
+        m = hi - lo
+        ul[b, :m] = u[lo:hi] - b * block_n
+        ot[b, :m] = o[lo:hi]
+        wt[b, :m] = w2[lo:hi]
+    deg = np.zeros((n_pad,), np.float32)
+    np.add.at(deg, src, weight)
+    np.add.at(deg, dst, weight)
+    return NodeBlocking(
+        u_local=jnp.asarray(ul.reshape(-1)),
+        other=jnp.asarray(ot.reshape(-1)),
+        weight=jnp.asarray(wt.reshape(-1)),
+        deg=jnp.asarray(deg),
+        block_n=block_n,
+        block_e=block_e,
+        chunks_per_block=c,
+        num_nodes=int(num_nodes),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_n", "block_e", "chunks_per_block", "interpret"))
+def _edge_spmm_blocked(u_local, other, weight, deg, v, ab,
+                       *, block_n: int, block_e: int,
+                       chunks_per_block: int, interpret: bool):
+    n, k = v.shape
+    n_pad = deg.shape[0]
+    pad_k = (-k) % 128
+    vp = jnp.pad(v.astype(jnp.float32), ((0, n_pad - n), (0, pad_k)))
+    gathered = vp[other]  # (NB*C*BE, kp) XLA gather; the scatter is MXU
+    out = kernel.edge_spmm_nb(
+        u_local, weight, gathered, deg, vp, ab,
+        block_n=block_n, block_e=block_e,
+        chunks_per_block=chunks_per_block, interpret=interpret)
     return out[:n, :k]
+
+
+def edge_spmm_blocked(nb: NodeBlocking, v: jax.Array,
+                      alpha=1.0, beta=0.0,
+                      *, interpret: bool = False) -> jax.Array:
+    """alpha * (L V) + beta * V via the node-blocked kernel.
+
+    Accepts (n,) or (n, k) with n == nb.num_nodes; alpha/beta may be
+    traced scalars (the streaming service's per-session dilation scale).
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    if v.shape[0] != nb.num_nodes:
+        raise ValueError(
+            f"panel rows {v.shape[0]} != blocking num_nodes {nb.num_nodes}")
+    out = _edge_spmm_blocked(
+        nb.u_local, nb.other, nb.weight, nb.deg, v, _ab(alpha, beta),
+        block_n=nb.block_n, block_e=nb.block_e,
+        chunks_per_block=nb.chunks_per_block, interpret=interpret)
+    return out[:, 0] if squeeze else out

@@ -12,3 +12,10 @@ def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array,
     out = out.at[src].add(wd)
     out = out.at[dst].add(-wd)
     return out
+
+
+def edge_spmm_affine(src: jax.Array, dst: jax.Array, w: jax.Array,
+                     v: jax.Array, alpha, beta) -> jax.Array:
+    """alpha * (L V) + beta * V — oracle for the fused affine epilogue
+    (both the one-hot and the node-blocked kernel variants)."""
+    return alpha * edge_spmm(src, dst, w, v) + beta * v

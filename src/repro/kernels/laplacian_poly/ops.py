@@ -42,6 +42,34 @@ def poly_step(l_mat: jax.Array, u: jax.Array, c, *, block: int = 0,
     return out[:n, :k]
 
 
+def poly_step_edges(blocking, u: jax.Array, c, *,
+                    interpret: bool = False) -> jax.Array:
+    """out = U - c (L @ U) on EDGE-LIST operands: the dense poly_step
+    extended to matrix-free graphs via the node-blocked incidence SpMM
+    (repro.kernels.edge_spmm) with the AXPY folded into its epilogue
+    (alpha=-c, beta=1) — the panel never round-trips HBM between the
+    matvec and the subtraction.  ``blocking`` is an
+    ``edge_spmm.ops.NodeBlocking`` built once per graph.
+    """
+    from repro.kernels.edge_spmm import ops as es_ops
+    return es_ops.edge_spmm_blocked(blocking, u, alpha=-c, beta=1.0,
+                                    interpret=interpret)
+
+
+def limit_series_apply_edges(blocking, v: jax.Array, *, degree: int,
+                             scale: float = 1.0,
+                             interpret: bool = False) -> jax.Array:
+    """-(I - scale L / degree)^degree @ V, matrix-free, one fused
+    node-blocked kernel per step (edge-list analogue of
+    ``limit_series_apply``)."""
+    c = scale / degree
+
+    def body(_, u):
+        return poly_step_edges(blocking, u, c, interpret=interpret)
+
+    return -jax.lax.fori_loop(0, degree, body, v)
+
+
 @functools.partial(jax.jit, static_argnames=("degree", "interpret", "block"))
 def limit_series_apply(l_mat: jax.Array, v: jax.Array, *, degree: int,
                        scale: float = 1.0, block: int = 0,

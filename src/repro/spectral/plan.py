@@ -258,16 +258,20 @@ def probe_and_plan(
     budget: int = 96,
     num_probes: int = 4,
     num_steps: int = 24,
+    backend: str = "auto",
 ) -> tuple[probes_mod.ProbeResult, DilationPlan]:
     """One-call convenience: SLQ-probe an EdgeList, then plan.
 
     The Gershgorin bound rides along as the cap/fallback, so the result
     is never worse-anchored than the pre-planner call sites were.
+    ``backend`` selects the probe matvec kernels (repro.core.backend),
+    so probing runs on the same backend as the solve it tunes.
     """
     from repro.core import laplacian as lap
 
     probe = probes_mod.probe_graph(
-        g, key=key, num_probes=num_probes, num_steps=num_steps)
+        g, key=key, num_probes=num_probes, num_steps=num_steps,
+        backend=backend)
     plan = plan_dilation(
         probe, k=k, budget=budget,
         rho_fallback=float(lap.spectral_radius_upper_bound(g)))

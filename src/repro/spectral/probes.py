@@ -178,7 +178,8 @@ def slq_probe(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_nodes", "num_probes", "num_steps"))
+    jax.jit,
+    static_argnames=("num_nodes", "num_probes", "num_steps", "backend"))
 def probe_edge_arrays(
     src: jax.Array,
     dst: jax.Array,
@@ -189,16 +190,25 @@ def probe_edge_arrays(
     num_nodes: int,
     num_probes: int = 4,
     num_steps: int = 24,
+    backend: str = "segment",
 ) -> ProbeResult:
     """Jitted SLQ over bare (possibly capacity-padded) edge buffers.
 
-    One compile per (edge capacity, node capacity, probe config) — the
-    streaming service's capacity classes hit this cache, so probing a
-    newly admitted session recompiles nothing.
+    One compile per (edge capacity, node capacity, probe config,
+    backend) — the streaming service's capacity classes hit this cache,
+    so probing a newly admitted session recompiles nothing.
+
+    ``backend`` routes the probe matvec through repro.core.backend so
+    the spectrum estimate exercises the same kernels the solve will.
+    Blockings cannot be built under trace, so the pallas path uses the
+    one-hot kernel and silently stays on segment past its n limit.
     """
+    from repro.core import backend as backend_mod
+
+    matvec = backend_mod.edge_arrays_matvec_fn(src, dst, weight, backend,
+                                               num_nodes=num_nodes)
     return slq_probe(
-        lambda v: edge_matvec_arrays(src, dst, weight, v),
-        num_nodes, key,
+        matvec, num_nodes, key,
         num_probes=num_probes, num_steps=num_steps, n_real=n_real)
 
 
@@ -207,6 +217,7 @@ def probe_graph(
     key: jax.Array | None = None,
     num_probes: int = 4,
     num_steps: int = 24,
+    backend: str = "segment",
 ) -> ProbeResult:
     """Host convenience: SLQ-probe an EdgeList's Laplacian spectrum."""
     if key is None:
@@ -215,7 +226,8 @@ def probe_graph(
     return probe_edge_arrays(
         g.src, g.dst, g.weight, key,
         jnp.asarray(g.num_nodes, jnp.int32),
-        num_nodes=g.num_nodes, num_probes=num_probes, num_steps=num_steps)
+        num_nodes=g.num_nodes, num_probes=num_probes, num_steps=num_steps,
+        backend=backend)
 
 
 def probe_from_eigenvalues(lam) -> ProbeResult:

@@ -279,3 +279,24 @@ def spectral_radius_upper_bound(store: GraphStore) -> tuple[GraphStore, jax.Arra
     """(refreshed store, 2 * max weighted degree) — the Sec. 5.4 bound."""
     store = refresh_degrees(store)
     return store, 2.0 * jnp.max(store.deg)
+
+
+def node_blocking(store: GraphStore, *, block_n: int = 512,
+                  block_e: int = 128):
+    """Host-side node-blocked half-edge layout of the store's LIVE edges
+    for the pallas matvec backend (repro.core.backend).
+
+    Built once per admission / re-solve and cached alongside the padded
+    buffers by the owner (the streaming service keeps it per session);
+    edge mutations invalidate it — rebuild after ``apply_edge_batch``.
+    Free slots are dropped during bucketing (they are inert and would
+    otherwise pile into node-block 0), so the layout's chunk count
+    tracks the LIVE edge count, snapped to powers of two: sessions of
+    one capacity class with similar skew share one compiled program.
+    """
+    from repro.core import backend as backend_mod
+
+    return backend_mod.build_node_blocking(
+        np.asarray(store.src), np.asarray(store.dst),
+        np.asarray(store.weight), store.num_nodes,
+        block_n=min(block_n, store.num_nodes), block_e=block_e)

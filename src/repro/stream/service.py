@@ -42,16 +42,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import kmeans as km
 from repro.core import laplacian as lap
 from repro.core import metrics, solvers
+from repro.kernels.edge_spmm import ops as es_ops
 from repro.spectral import probes as spectral_probes
 from repro.stream import graph_store as gs
 from repro.stream import tracking, updates, warm
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(int(np.ceil(np.log2(max(x, 1)))), 0)
+_next_pow2 = es_ops.next_pow2
 
 
 def node_capacity_class(num_nodes: int) -> int:
@@ -85,10 +86,21 @@ class ServiceConfig:
     probe_spectrum: bool = True
     probe_vectors: int = 2  # SLQ probe vectors per (re-)probe
     probe_steps: int = 16  # Lanczos steps per probe vector
+    # Matvec backend for tick programs and probes (repro.core.backend):
+    # "auto" = pallas on TPU, segment elsewhere.  Pallas ticks run the
+    # node-blocked incidence-SpMM kernel with the dilation step fused
+    # into its epilogue; the per-session blocking is built on admission
+    # and rebuilt after edge updates (graph_store.node_blocking), and
+    # sessions group by (capacity class, blocking chunk count) — the
+    # chunk count is pow2-snapped, so compile counts stay logarithmic.
+    backend: str = "auto"
+    tick_block_n: int = 512  # node-block rows per VMEM panel slice
 
     def __post_init__(self):
         if self.degree % 2 == 0:
             raise ValueError("degree must be odd (limit_neg_exp series)")
+        if self.backend not in backend_mod.BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
 
 
 @dataclasses.dataclass
@@ -103,6 +115,8 @@ class _Session:
     rho_ub: float  # Gershgorin bound at the time rho was set
     tau: float  # effective dilation strength (config, capped per probe)
     tracker: tracking.LabelTracker
+    blocking: es_ops.NodeBlocking | None = None  # pallas tick layout cache
+    group_key: tuple | None = None  # last tick-group key (occupancy anchor)
     est: updates.EigenEstimate | None = None
     converged: bool = False
     residual: float = float("inf")
@@ -151,6 +165,7 @@ class StreamingService:
 
     def __init__(self, cfg: ServiceConfig = ServiceConfig()):
         self.cfg = cfg
+        self._backend = backend_mod.resolve_backend(cfg.backend)
         self._sessions: dict[str, _Session] = {}
         self._compiled: dict[tuple, object] = {}
         self._admitted = 0
@@ -190,6 +205,7 @@ class StreamingService:
                 # Lanczos recurrence handles m >= n via sticky breakdown,
                 # so the compile stays shared across the capacity class.
                 num_steps=cfg.probe_steps,
+                backend=self._backend,
             )
             est = float(probe.lambda_max)
             if np.isfinite(est) and est > 0.0:
@@ -299,9 +315,15 @@ class StreamingService:
         store, rho_ub = gs.spectral_radius_upper_bound(store)
         rho_ub_new = float(rho_ub)
         sess.store = store
-        rho_new = min(
-            rho_ub_new,
-            sess.rho * rho_ub_new / max(sess.rho_ub, 1e-30))
+        sess.blocking = None  # edge mutation stales the pallas layout
+        if sess.rho_ub > 0.0:
+            rho_new = min(rho_ub_new,
+                          sess.rho * rho_ub_new / sess.rho_ub)
+        else:
+            # degenerate (edgeless) admission: rho == rho_ub == 0, and
+            # the ratio would pin rho at 0 forever (c -> 1/eps -> NaN
+            # panels); re-anchor on the fresh bound instead
+            rho_new = rho_ub_new
         self._set_scale(sess, rho_new, rho_ub_new)
         if sess.est is not None:
             prev_v = sess.est.v
@@ -364,12 +386,46 @@ class StreamingService:
     def _class_key(self, sess: _Session) -> tuple[int, int]:
         return (sess.store.num_nodes, sess.store.capacity)
 
-    def _get_step(self, node_cap: int, edge_cap: int, occupancy: int):
-        key = (node_cap, edge_cap, occupancy)
-        fn = self._compiled.get(key)
+    def _ensure_blocking(self, sess: _Session) -> None:
+        """Build (or rebuild after updates) the session's node-blocked
+        layout for pallas ticks — host-side, cached on the session."""
+        if sess.blocking is None:
+            sess.blocking = gs.node_blocking(
+                sess.store, block_n=self.cfg.tick_block_n)
+
+    def _group_key(self, sess: _Session) -> tuple:
+        """Sessions sharing a group share one compiled tick program.
+
+        Segment groups by capacity class; pallas additionally groups by
+        the blocking's static layout (block size and pow2-snapped chunk
+        count), since those are the shapes the kernel compiles against.
+        A converged session whose blocking was invalidated by updates
+        keeps its LAST group key — it won't tick, so no layout rebuild,
+        but it must keep anchoring its old group's occupancy bucket
+        (shrinking buckets would recompile the tick program).
+        """
+        if self._backend == "pallas":
+            if (sess.blocking is None and sess.converged
+                    and sess.group_key is not None):
+                return sess.group_key
+            self._ensure_blocking(sess)
+            b = sess.blocking
+            key = (self._class_key(sess), b.block_n, b.chunks_per_block,
+                   b.block_e)
+        else:
+            key = (self._class_key(sess),)
+        sess.group_key = key
+        return key
+
+    def _get_step(self, key: tuple, occupancy: int):
+        fn = self._compiled.get((key, occupancy))
         if fn is None:
-            fn = self._build_step()
-            self._compiled[key] = fn
+            if self._backend == "pallas":
+                _, block_n, chunks, block_e = key
+                fn = self._build_step_pallas(block_n, chunks, block_e)
+            else:
+                fn = self._build_step()
+            self._compiled[(key, occupancy)] = fn
         return fn
 
     @property
@@ -400,33 +456,93 @@ class StreamingService:
 
         return jax.jit(jax.vmap(one))
 
+    def _build_step_pallas(self, block_n: int, chunks: int, block_e: int):
+        """Tick program on the pallas backend: the per-session operator
+        (I - c L)^degree runs the node-blocked incidence-SpMM kernel
+        with the dilation step (alpha=-c, beta=1) fused into its
+        epilogue, and the solver step uses the fused mu-EG kernel.
+
+        Sessions are advanced with ``lax.map`` over the group's stacked
+        blocking arrays — pallas grids don't vmap across the session
+        axis, so the batching win here is per-matvec MXU utilization,
+        not cross-session fusion; the program is still compiled ONCE per
+        (class, blocking layout, occupancy bucket).
+        """
+        cfg = self.cfg
+        interp = backend_mod.kernel_interpret()
+        step_fn = solvers.make_step_fn(cfg.method, self._backend)
+
+        def one(args):
+            u_local, other, w, deg, v, c = args
+            nb = es_ops.NodeBlocking(
+                u_local=u_local, other=other, weight=w, deg=deg,
+                block_n=block_n, block_e=block_e,
+                chunks_per_block=chunks, num_nodes=v.shape[0])
+
+            def opv(u):
+                def body(_, x):
+                    return es_ops.edge_spmm_blocked(
+                        nb, x, alpha=-c, beta=1.0, interpret=interp)
+                return jax.lax.fori_loop(0, cfg.degree, body, u)
+
+            state = solvers.SolverState(v=v, step=jnp.zeros((), jnp.int32))
+
+            def sstep(st, _):
+                return step_fn(st, opv(st.v), cfg.lr), None
+
+            state, _ = jax.lax.scan(
+                sstep, state, None, length=cfg.steps_per_tick)
+            av = opv(state.v)
+            return state.v, metrics.panel_residual(state.v, av)
+
+        return jax.jit(lambda args: jax.lax.map(one, args))
+
     def tick(self) -> dict[str, float]:
         """Advance every unconverged session cfg.steps_per_tick solver
-        steps — one compiled program invocation per capacity class."""
+        steps — one compiled program invocation per capacity class (and,
+        on pallas, per blocking layout)."""
         cfg = self.cfg
         groups: dict[tuple, list[_Session]] = defaultdict(list)
         totals: dict[tuple, int] = defaultdict(int)
         for sess in self._sessions.values():
-            totals[self._class_key(sess)] += 1
+            # totals count converged sessions too, PER GROUP: a group's
+            # occupancy must not shrink as its members converge, but it
+            # also must not pad to the whole class's total when pallas
+            # splits a class across blocking layouts (_group_key reuses
+            # a converged session's last key rather than rebuilding its
+            # invalidated blocking)
+            totals[self._group_key(sess)] += 1
+        for sess in self._sessions.values():
             if not sess.converged:
-                groups[self._class_key(sess)].append(sess)
+                groups[self._group_key(sess)].append(sess)
         out: dict[str, float] = {}
-        for (node_cap, edge_cap), members in groups.items():
-            # occupancy bucket follows the class's TOTAL session count,
+        for gkey, members in groups.items():
+            # occupancy bucket follows the group's TOTAL session count,
             # not the active count, so sessions converging one by one
             # never shrink the bucket (stable shapes => zero recompiles
             # until the user actually evicts)
-            occ = _next_pow2(totals[(node_cap, edge_cap)])
-            step = self._get_step(node_cap, edge_cap, occ)
+            occ = _next_pow2(totals[gkey])
+            step = self._get_step(gkey, occ)
             idx = list(range(len(members))) + [0] * (occ - len(members))
             stack = lambda f: jnp.stack([f(members[i]) for i in idx])
-            vs, res = step(
-                stack(lambda s: s.store.src),
-                stack(lambda s: s.store.dst),
-                stack(lambda s: s.store.weight),
-                stack(lambda s: s.v),
-                jnp.asarray([members[i].c for i in idx], jnp.float32),
-            )
+            cs = jnp.asarray([members[i].c for i in idx], jnp.float32)
+            if self._backend == "pallas":
+                vs, res = step((
+                    stack(lambda s: s.blocking.u_local),
+                    stack(lambda s: s.blocking.other),
+                    stack(lambda s: s.blocking.weight),
+                    stack(lambda s: s.blocking.deg),
+                    stack(lambda s: s.v),
+                    cs,
+                ))
+            else:
+                vs, res = step(
+                    stack(lambda s: s.store.src),
+                    stack(lambda s: s.store.dst),
+                    stack(lambda s: s.store.weight),
+                    stack(lambda s: s.v),
+                    cs,
+                )
             res = np.asarray(res)
             for i, sess in enumerate(members):
                 sess.v = vs[i]

@@ -69,3 +69,19 @@ def test_exact_reference_pipeline():
     labels = exact_cluster_reference(g, 4)
     acc = float(cluster_agreement(labels, jnp.asarray(truth), 4))
     assert acc > 0.95
+
+
+def test_walks_with_auto_transform_skips_probe():
+    """Regression: transform="auto" + estimation="walks" used to pay a
+    ~96-matvec probe-and-plan whose plan the walks branch then
+    discarded; now the probe is skipped entirely (plan is None) and the
+    pipeline still runs."""
+    from repro.core import ClusteringConfig, SolverConfig, spectral_cluster
+
+    g, truth = graphs.ring_of_cliques(3, 6)
+    labels, info = spectral_cluster(g, ClusteringConfig(
+        num_clusters=3, transform="auto", estimation="walks", degree=6,
+        num_walkers=512,
+        solver=SolverConfig(steps=40, eval_every=20, lr=0.1)))
+    assert info["plan"] is None
+    assert labels.shape == (g.num_nodes,)

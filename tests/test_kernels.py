@@ -14,6 +14,8 @@ from repro.kernels.edge_spmm import ops as es_ops, ref as es_ref
 from repro.kernels.eg_update import ops as eg_ops, ref as eg_ref
 from repro.kernels.laplacian_poly import ops as lp_ops, ref as lp_ref
 
+pytestmark = pytest.mark.pallas
+
 I = dict(interpret=True)
 
 
@@ -110,6 +112,56 @@ def test_edge_spmm_property(seed):
     got = es_ops.edge_spmm(src, dst, w, v, **I)
     want = es_ref.edge_spmm(src, dst, w, v)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_edge_spmm_affine_epilogue():
+    """alpha * L V + beta * V fused into the one-hot kernel epilogue."""
+    rng = np.random.default_rng(3)
+    e, n, k = 200, 120, 4
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 2, e), jnp.float32)
+    v = rand(20, (n, k))
+    got = es_ops.edge_spmm(src, dst, w, v, alpha=-0.3, beta=1.0, **I)
+    want = es_ref.edge_spmm_affine(src, dst, w, v, -0.3, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=8, deadline=None)
+def test_edge_spmm_node_blocked_property(seed):
+    """build_node_blocking + blocked kernel == scatter-add oracle on
+    random (unaligned) graphs and block sizes."""
+    rng = np.random.default_rng(seed)
+    e = int(rng.integers(1, 300))
+    n = int(rng.integers(8, 200))
+    k = int(rng.integers(1, 9))
+    block_n = int(rng.choice([8, 16, 32, 64]))
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 2, e), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
+    got = es_ops.edge_spmm_blocked(nb, v, **I)
+    # self-loops (src == dst) cancel in both paths: deg adds 2w, the two
+    # half-edges subtract w each
+    want = es_ref.edge_spmm(src, dst, w, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_limit_series_apply_edges_matches_dense():
+    """Edge-list fused series == dense-kernel series == core.series."""
+    from repro.core import graphs, laplacian_dense, limit_neg_exp
+
+    g, _ = graphs.ring_of_cliques(3, 6)
+    nb = es_ops.build_node_blocking(g.src, g.dst, g.weight, g.num_nodes,
+                                    block_n=8)
+    v = rand(21, (g.num_nodes, 3))
+    got = lp_ops.limit_series_apply_edges(nb, v, degree=9, scale=0.5,
+                                          interpret=True)
+    want = limit_neg_exp(9, scale=0.5).apply(
+        lambda u: laplacian_dense(g) @ u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 # --- eg_update -------------------------------------------------------------

@@ -68,6 +68,28 @@ def test_laplacian_psd_and_symmetric(seed):
     assert lam.max() <= float(spectral_radius_upper_bound(g)) + 1e-4
 
 
+def test_minibatch_matvec_1d_and_2d_agree():
+    """Regression: the 1-D and (N, 1) forms weight edges identically
+    (the old jnp.atleast_2d(diff.T).T contortion is gone) and the
+    full-edge-set minibatch equals the exact matvec."""
+    g = random_graph(5)
+    rng = np.random.default_rng(9)
+    v = jnp.asarray(rng.normal(size=(g.num_nodes,)), jnp.float32)
+    sel = jnp.asarray(rng.integers(0, g.num_edges, 16), jnp.int32)
+    out1 = minibatch_laplacian_matvec(
+        g.src[sel], g.dst[sel], g.weight[sel], v, g.num_edges)
+    out2 = minibatch_laplacian_matvec(
+        g.src[sel], g.dst[sel], g.weight[sel], v[:, None], g.num_edges)
+    assert out1.shape == (g.num_nodes,)
+    assert out2.shape == (g.num_nodes, 1)
+    np.testing.assert_allclose(out1, out2[:, 0], rtol=1e-6, atol=1e-6)
+    # scale E_total/B == 1 on the full edge set => exact L @ v
+    full = minibatch_laplacian_matvec(
+        g.src, g.dst, g.weight, v, g.num_edges)
+    np.testing.assert_allclose(full, laplacian_matvec(g, v),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_minibatch_matvec_unbiased():
     g, _ = graphs.ring_of_cliques(3, 5)
     L = laplacian_dense(g)

@@ -395,3 +395,24 @@ def test_add_graph_rejects_underprovisioned_k():
     g, _ = graphs.ring_of_cliques(3, 6)
     with pytest.raises(ValueError, match="tracked"):
         svc.add_graph("bad", g, num_clusters=4)  # needs 5 > k=4
+
+
+@pytest.mark.parametrize("backend", ["segment", "pallas"])
+def test_edgeless_admission_recovers_after_updates(backend):
+    """Regression: a graph admitted with zero edges has rho == rho_ub
+    == 0; the ratio-based rho rescale must re-anchor on the fresh bound
+    when edges arrive instead of pinning rho at 0 forever (which blew
+    the dilation scale up to ~1/eps and NaN'd the panel)."""
+    from repro.core.laplacian import make_edge_list
+
+    svc = StreamingService(dataclasses.replace(
+        SVC_CFG, steps_per_tick=5, backend=backend, tick_block_n=32))
+    g0 = make_edge_list(np.zeros((0, 2), np.int64), 40)
+    svc.add_graph("empty", g0, num_clusters=3, edge_capacity=256)
+    svc.apply_updates("empty", [[0, 1], [1, 2], [2, 3], [3, 0]],
+                      [1.0, 1.0, 1.0, 1.0])
+    res = svc.tick()["empty"]
+    sess = svc._sessions["empty"]
+    assert np.isfinite(res)
+    assert sess.rho > 0.0
+    assert bool(jnp.all(jnp.isfinite(sess.v)))
