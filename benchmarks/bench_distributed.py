@@ -1,0 +1,164 @@
+"""Weak-scaling benchmarks for sharded serving (BENCH_distributed.json).
+
+Rows track the mesh-parallel path PR 4 built: the sharded Laplacian
+matvec and the sharded streaming tick at 1/2/4/8 virtual devices on a
+fixed n=9216 problem (weak scaling of the collective footprint: the
+per-shard edge slice shrinks as devices grow, the psum'd (n, k) panel
+does not), plus the acceptance row — a sharded n=9216 solve past
+``ONE_HOT_NODE_LIMIT`` running PER-SHARD NODE BLOCKINGS on the pallas
+backend, cross-checked against the sharded segment solve.
+
+Device counts must be fixed before jax initializes, so ``run()`` spawns
+ONE SUBPROCESS PER DEVICE COUNT with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D`` re-running this
+module in child mode; children print JSON rows on stdout.  CPU caveat
+(same as bench_kernels): the virtual devices share one host and pallas
+runs in interpret mode, so these rows track correctness-adjacent
+latency trends and collective overhead, NOT TPU speedups — on a real
+mesh the same harness times the real thing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+N = 9216  # past backend.ONE_HOT_NODE_LIMIT => node-blocked layouts
+DEGREE = 5
+SOLVE_STEPS = 2
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _graph():
+    from repro.core import graphs
+
+    g, _ = graphs.sparse_sbm_graph(N, 4, avg_degree_in=3.0,
+                                   avg_degree_out=0.5, seed=0)
+    return g
+
+
+def _child(num_devices: int) -> list:
+    """Runs inside the XLA_FLAGS subprocess; returns (name, us, derived)
+    rows for this device count."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_call
+    from repro.compat import default_edge_mesh
+    from repro.core import backend as backend_mod
+    from repro.core import distributed, solvers
+    from repro.core import laplacian as lap
+    from repro.core.series import limit_neg_exp
+    from repro.stream.service import ServiceConfig, StreamingService
+
+    assert jax.device_count() == num_devices, (
+        jax.device_count(), num_devices)
+    d = num_devices
+    mesh = default_edge_mesh()
+    g = _graph()
+    rows = []
+
+    # --- sharded segment matvec (the tick/solve hot path's inner op) --
+    gp = distributed.pad_edges_for_mesh(g, d)
+    mv = distributed.sharded_laplacian_matvec(mesh, backend="segment")
+    v = jax.random.normal(jax.random.PRNGKey(0), (N, 6))
+    us = time_call(lambda: mv(gp.src, gp.dst, gp.weight, v), iters=5)
+    rows.append((f"distributed/matvec_n{N}_d{d}", round(us, 1),
+                 f"edges_per_shard={gp.num_edges // d}"))
+
+    # --- warm sharded streaming tick (ServiceConfig(mesh=...)) --------
+    svc = StreamingService(ServiceConfig(
+        backend="segment", mesh=mesh, k=6, num_clusters=4,
+        degree=7, steps_per_tick=5, seed=0))
+    svc.add_graph("wk", g)
+    svc.tick()  # compile + first tick
+    t0 = time.perf_counter()
+    svc.tick()
+    warm_us = (time.perf_counter() - t0) * 1e6
+    sess = svc.session_info("wk")
+    rows.append((f"distributed/tick_warm_n{N}_d{d}", round(warm_us, 1),
+                 f"degree=7,steps=5,edge_cap={sess['edge_capacity']},"
+                 f"rho={sess['rho']:.3g}"))
+
+    # --- acceptance row: sharded node-blocked pallas solve ------------
+    # (only at the top device count — interpret-mode pallas is slow)
+    if d == max(DEVICE_COUNTS):
+        rho = float(lap.spectral_radius_upper_bound(g))
+        s = limit_neg_exp(DEGREE, scale=8.0 / rho)
+        cfg = solvers.SolverConfig(
+            method="mu_eg", lr=0.3, steps=SOLVE_STEPS,
+            eval_every=SOLVE_STEPS, k=6, seed=0)
+        panels = {}
+        for b in ("segment", "pallas"):
+            op = distributed.distributed_series_operator(
+                mesh, g, s, backend=b)
+            t0 = time.perf_counter()
+            state, _ = solvers.run_solver(op, N, cfg)
+            panels[b] = jax.block_until_ready(state.v)
+            wall = time.perf_counter() - t0
+            mode = ("interpret" if b == "pallas"
+                    and backend_mod.kernel_interpret() else "native")
+            rows.append((
+                f"distributed/solve_nb_n{N}_d{d}_{b}",
+                round(wall * 1e6, 1),
+                f"steps={SOLVE_STEPS},degree={DEGREE},mode={mode},"
+                f"per_shard_blocking={b == 'pallas'},"
+                f"one_hot_limit={backend_mod.ONE_HOT_NODE_LIMIT}"))
+        err = float(jnp.max(jnp.abs(panels["segment"] - panels["pallas"])))
+        rows[-1] = (rows[-1][0], rows[-1][1],
+                    rows[-1][2] + f",xbackend_maxerr={err:.2g}")
+    return rows
+
+
+def run():
+    """Parent: spawn one child per device count, collect rows, write
+    BENCH_distributed.json."""
+    from benchmarks.common import write_bench_json
+
+    here = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(here))
+    rows = []
+    weak = {}
+    for d in DEVICE_COUNTS:
+        env = dict(os.environ)
+        # forced flag LAST: XLA parses duplicate flags last-wins, so an
+        # inherited device-count flag (e.g. the distributed lane's 8)
+        # must not override this child's count
+        env["XLA_FLAGS"] = (
+            (env["XLA_FLAGS"] + " " if env.get("XLA_FLAGS") else "")
+            + f"--xla_force_host_platform_device_count={d}")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(root, "src"), root]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        proc = subprocess.run(
+            [sys.executable, here, "--child", str(d)],
+            capture_output=True, text=True, env=env, cwd=root)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"bench_distributed child d={d} failed:\n{proc.stderr[-2000:]}")
+        child_rows = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.extend(tuple(r) for r in child_rows)
+        for name, us, derived in child_rows:
+            if name.startswith(f"distributed/tick_warm_n{N}_d"):
+                weak[f"tick_warm_us_d{d}"] = us
+            if name.startswith(f"distributed/matvec_n{N}_d"):
+                weak[f"matvec_us_d{d}"] = us
+    write_bench_json("distributed", rows, extra={
+        "weak_scaling": {
+            "n": N,
+            "device_counts": list(DEVICE_COUNTS),
+            **weak,
+        },
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--child":
+        print(json.dumps(_child(int(sys.argv[2]))))
+    else:
+        for r in run():
+            print(",".join(str(x) for x in r))

@@ -10,13 +10,14 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_baselines, bench_cliques, bench_kernels,
-                            bench_linkpred, bench_mdp, bench_series_degree,
-                            bench_spectral, bench_stream, bench_transforms,
-                            bench_walks)
+    from benchmarks import (bench_baselines, bench_cliques, bench_distributed,
+                            bench_kernels, bench_linkpred, bench_mdp,
+                            bench_series_degree, bench_spectral, bench_stream,
+                            bench_transforms, bench_walks)
     mods = [
         ("spectral", bench_spectral),
         ("stream", bench_stream),
+        ("distributed", bench_distributed),
         ("table2", bench_transforms),
         ("fig2_3", bench_mdp),
         ("fig4", bench_cliques),

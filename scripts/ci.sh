@@ -11,4 +11,13 @@ python -m pytest -q -m "stochastic and not slow"
 # Kernel/backend equivalence next (interpret-mode pallas == segment):
 # a kernel regression silently corrupts every pallas-backend solve.
 python -m pytest -q -m "pallas and not slow"
-exec python -m pytest -q -m "not slow and not stochastic and not pallas" "$@"
+# Distributed lane: a SUBPROCESS with 8 virtual CPU devices (the flag
+# must be set before jax initializes, hence the fresh interpreter) so
+# the shard_map collectives — per-shard matvecs, psum'd series
+# programs, sharded capacity-class ticks — actually cross device
+# boundaries instead of degenerating to a 1x1 mesh.
+# (forced flag LAST: XLA parses duplicate flags last-wins, so an
+# inherited device-count flag must not override the lane's 8)
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python -m pytest -q -m "distributed and not slow"
+exec python -m pytest -q -m "not slow and not stochastic and not pallas and not distributed" "$@"

@@ -58,6 +58,25 @@ def make_mesh(axis_shapes, axis_names):
     return jax.make_mesh(axis_shapes, axis_names)
 
 
+def default_edge_mesh(max_shards: int | None = None,
+                      axis_names=("data", "model")):
+    """The ("data", "model") edge-sharding mesh over all local devices.
+
+    Every edge-parallel entry point in this repo (`core.distributed`,
+    `stream.sharded`, the distributed test lane and benchmarks) shards
+    edges over "data"; this helper builds that mesh from however many
+    devices the process sees — 1 in plain tier-1 runs, 8 under the CI
+    lane's ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — so
+    call sites don't hand-roll device reshapes per jax version.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if max_shards is None else min(len(devs), max_shards)
+    return Mesh(np.array(devs[:n]).reshape(n, 1), axis_names)
+
+
 def set_mesh(mesh):
     """Context manager installing `mesh` as the ambient mesh.
 

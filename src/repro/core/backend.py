@@ -46,7 +46,9 @@ from repro.core import laplacian as lap
 from repro.kernels.edge_spmm import ops as es_ops
 from repro.kernels.edge_spmm.ops import (  # noqa: F401  (re-exported API)
     NodeBlocking,
+    ShardedNodeBlocking,
     build_node_blocking,
+    build_sharded_node_blocking,
 )
 
 MatVec = Callable[[jax.Array], jax.Array]
@@ -107,6 +109,17 @@ def blocking_for(g: lap.EdgeList, *, block_n: int | None = None,
     """Host-side node-blocked layout of an EdgeList (concrete arrays)."""
     return build_node_blocking(
         g.src, g.dst, g.weight, g.num_nodes,
+        block_n=block_n or DEFAULT_BLOCK_N, block_e=block_e)
+
+
+def sharded_blocking_for(g: lap.EdgeList, num_shards: int,
+                         *, block_n: int | None = None,
+                         block_e: int = 128) -> ShardedNodeBlocking:
+    """Per-shard node-blocked layouts of a mesh-padded EdgeList — the
+    scalable layout for ``distributed.sharded_blocked_matvec`` (the
+    sharded pallas path past ``ONE_HOT_NODE_LIMIT``)."""
+    return build_sharded_node_blocking(
+        g.src, g.dst, g.weight, g.num_nodes, num_shards,
         block_n=block_n or DEFAULT_BLOCK_N, block_e=block_e)
 
 

@@ -43,6 +43,15 @@ def pad_edges_for_mesh(g: EdgeList, num_shards: int) -> EdgeList:
     return lap_mod.pad_edge_list(g, e + ((-e) % num_shards))
 
 
+def num_edge_shards(mesh: Mesh, edge_axes=("data",)) -> int:
+    """Product of the mesh's edge-axis sizes — the shard count every
+    edge buffer (and per-shard blocking) must divide into."""
+    num_shards = 1
+    for a in edge_axes:
+        num_shards *= mesh.shape[a]
+    return num_shards
+
+
 def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",),
                              backend: str = "auto",
                              num_nodes: int | None = None):
@@ -54,11 +63,13 @@ def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",),
     psum contract (one (n, k) panel reduction per matvec) is unchanged.
     The panel is replicated, so the per-shard kernel sees the full n and
     the one-hot VMEM guard (``resolve_for_arrays``) applies: past the
-    node limit the shard matvec degrades to segment (per-shard node
-    blockings are a ROADMAP follow-up).  Pass ``num_nodes`` to resolve
-    that guard up front — it also keeps shard_map's replication check
-    on when the resolution lands on segment; without it the check must
-    be disabled pessimistically (pallas_call has no replication rule).
+    node limit this raw-array form degrades to segment — build a
+    :class:`~repro.kernels.edge_spmm.ops.ShardedNodeBlocking` and use
+    :func:`sharded_blocked_matvec` to keep the pallas path instead.
+    Pass ``num_nodes`` to resolve that guard up front — it also keeps
+    shard_map's replication check on when the resolution lands on
+    segment; without it the check must be disabled pessimistically
+    (pallas_call has no replication rule).
     """
     from repro.core import backend as backend_mod
 
@@ -83,30 +94,125 @@ def sharded_laplacian_matvec(mesh: Mesh, edge_axes=("data",),
     return mv
 
 
+def sharded_blocked_matvec(mesh: Mesh, blocking, edge_axes=("data",),
+                           interpret: bool | None = None):
+    """Returns matvec(v) -> L @ v through PER-SHARD node-blocked pallas
+    kernels — the sharded path that scales past ``ONE_HOT_NODE_LIMIT``.
+
+    ``blocking`` is a :class:`~repro.kernels.edge_spmm.ops.
+    ShardedNodeBlocking` (build with ``backend.sharded_blocking_for``):
+    its stacked per-shard arrays are partitioned over ``edge_axes`` so
+    each device runs the node-blocked kernel on ITS half-edge buckets
+    only — a (block_n, k) panel slice resident per grid step, exactly
+    like the single-device kernel — and the per-shard
+    ``deg_s * v - A_s v`` outputs psum to the full ``L v``.
+    """
+    from repro.core import backend as backend_mod
+
+    if blocking.num_shards != num_edge_shards(mesh, edge_axes):
+        raise ValueError(
+            f"blocking has {blocking.num_shards} shards but the mesh's "
+            f"{edge_axes} axes hold {num_edge_shards(mesh, edge_axes)}")
+    interp = (backend_mod.kernel_interpret() if interpret is None
+              else interpret)
+    from repro.kernels.edge_spmm import ops as es_ops
+
+    spec_s = P(edge_axes)  # leading shard axis over the edge axes
+    static = blocking.statics
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_s, spec_s, spec_s, spec_s, P()),
+        out_specs=P(),
+        check_vma=False)  # pallas_call has no replication rule
+    def mv(u_local, other, w, deg, v):
+        local = es_ops.shard_local_blocking(u_local, other, w, deg,
+                                            **static)
+        out = es_ops.edge_spmm_blocked(local, v, interpret=interp)
+        return jax.lax.psum(out, edge_axes)
+
+    return lambda v: mv(blocking.u_local, blocking.other, blocking.weight,
+                        blocking.deg, v)
+
+
 def distributed_series_operator(
     mesh: Mesh,
     g: EdgeList,
     series: SpectralSeries,
     edge_axes=("data",),
     backend: str = "auto",
+    block_n: int | None = None,
 ):
     """Deterministic distributed operator: V -> (lambda* I - S(L)) V.
 
-    Edges are padded + sharded once; each of the series' `degree` matvecs
-    costs one psum of the (n, k) panel (per-shard kernel per `backend`).
+    Edges are padded + sharded once, and the WHOLE series runs as one
+    shard_mapped program: each of the `degree` matvecs is a per-shard
+    kernel (per ``backend``) followed by one psum of the (n, k) panel,
+    and the series AXPY applies post-psum (alpha rides the linear psum;
+    beta must apply exactly once, so the kernel-epilogue fusion is a
+    single-device luxury the sharded program trades for the collective).
+
+    On the pallas backend, graphs past ``ONE_HOT_NODE_LIMIT`` (or an
+    explicit ``block_n``) get PER-SHARD node blockings — the sharded
+    path no longer degrades to segment on large graphs.
     """
-    num_shards = 1
-    for a in edge_axes:
-        num_shards *= mesh.shape[a]
+    from repro.core import backend as backend_mod
+
+    num_shards = num_edge_shards(mesh, edge_axes)
     gp = pad_edges_for_mesh(g, num_shards)
-    mv = sharded_laplacian_matvec(mesh, edge_axes, backend=backend,
-                                  num_nodes=g.num_nodes)
+    b = backend_mod.resolve_backend(backend)
+    blocking = None
+    if b == "pallas" and (block_n is not None
+                          or g.num_nodes > backend_mod.ONE_HOT_NODE_LIMIT):
+        blocking = backend_mod.sharded_blocking_for(
+            gp, num_shards, block_n=block_n)
+    interp = backend_mod.kernel_interpret()
+    spec_e = P(edge_axes)
 
-    def op(v: jax.Array) -> jax.Array:
-        return series.apply_reversed(
-            lambda u: mv(gp.src, gp.dst, gp.weight, u), v)
+    if blocking is not None:
+        from repro.kernels.edge_spmm import ops as es_ops
 
-    return op
+        static = blocking.statics
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_e, spec_e, P()),
+            out_specs=P(),
+            check_vma=False)  # pallas_call has no replication rule
+        def series_program(u_local, other, w, deg, v):
+            local = es_ops.shard_local_blocking(u_local, other, w, deg,
+                                                **static)
+
+            def fused(u, alpha, beta):
+                lu = jax.lax.psum(
+                    es_ops.edge_spmm_blocked(local, u, interpret=interp),
+                    edge_axes)
+                return alpha * lu + beta * u
+
+            return series.apply_reversed_fused(fused, v)
+
+        return lambda v: series_program(
+            blocking.u_local, blocking.other, blocking.weight,
+            blocking.deg, v)
+
+    bb = backend_mod.resolve_for_arrays(b, g.num_nodes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_e, P()),
+        out_specs=P(),
+        check_vma=bb != "pallas")
+    def series_program(src, dst, w, v):
+        local_mv = backend_mod.edge_arrays_matvec_fn(
+            src, dst, w, bb, num_nodes=v.shape[0], interpret=interp)
+
+        def fused(u, alpha, beta):
+            lu = jax.lax.psum(local_mv(u), edge_axes)
+            return alpha * lu + beta * u
+
+        return series.apply_reversed_fused(fused, v)
+
+    return lambda v: series_program(gp.src, gp.dst, gp.weight, v)
 
 
 def distributed_minibatch_operator(
@@ -138,9 +244,7 @@ def distributed_minibatch_operator(
         out = out.at[g.dst[sel]].add(-w[:, None] * diff)
         return jax.lax.pmean(out, edge_axes)
 
-    num_shards = 1
-    for a in edge_axes:
-        num_shards *= mesh.shape[a]
+    num_shards = num_edge_shards(mesh, edge_axes)
 
     def op(key: jax.Array, v: jax.Array) -> jax.Array:
         def keyed_mv(k, u):
@@ -185,9 +289,7 @@ def distributed_walk_operator(
             acc = acc + coeffs[p] * est
         return jax.lax.pmean(acc, edge_axes)
 
-    num_shards = 1
-    for a in edge_axes:
-        num_shards *= mesh.shape[a]
+    num_shards = num_edge_shards(mesh, edge_axes)
 
     def op(key: jax.Array, v: jax.Array) -> jax.Array:
         dev_keys = jax.random.split(key, num_shards)

@@ -93,6 +93,62 @@ def next_pow2(x: int) -> int:
     return 1 << max(int(np.ceil(np.log2(max(int(x), 1)))), 0)
 
 
+def _block_sorted_half_edges(src, dst, weight, block_n: int, nb: int):
+    """Live edges -> directed half-edges sorted by destination node-block.
+
+    Returns (u, o, w2, counts): half-edge destination/source/weight in
+    deterministic block order plus per-block half-edge counts.  Shared
+    by the single-device and per-shard blocking builders so both lay
+    half-edges out identically.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    live = weight != 0.0
+    src, dst, weight = src[live], dst[live], weight[live]
+    # directed half-edges: destination u, source o
+    u = np.concatenate([src, dst])
+    o = np.concatenate([dst, src])
+    w2 = np.concatenate([weight, weight])
+    blk = u // block_n
+    order = np.argsort(blk, kind="stable")  # deterministic layout
+    counts = np.bincount(blk[order], minlength=nb)
+    return u[order], o[order], w2[order], counts
+
+
+def _chunks_for_counts(counts, block_e: int, snap_chunks: bool) -> int:
+    c = max(int(np.ceil(counts.max(initial=0) / block_e)), 1)
+    return next_pow2(c) if snap_chunks else c
+
+
+def _fill_buckets(u, o, w2, counts, nb: int, c: int,
+                  block_n: int, block_e: int):
+    """Scatter block-sorted half-edges into the uniform (nb, c*block_e)
+    bucket layout; unfilled tail slots stay zero-weight (inert)."""
+    ul = np.zeros((nb, c * block_e), np.int32)
+    ot = np.zeros((nb, c * block_e), np.int32)
+    wt = np.zeros((nb, c * block_e), np.float32)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for b in range(nb):
+        lo, hi = offs[b], offs[b + 1]
+        m = hi - lo
+        ul[b, :m] = u[lo:hi] - b * block_n
+        ot[b, :m] = o[lo:hi]
+        wt[b, :m] = w2[lo:hi]
+    return ul, ot, wt
+
+
+def _weighted_degrees(src, dst, weight, n_pad: int):
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    live = weight != 0.0
+    deg = np.zeros((n_pad,), np.float32)
+    np.add.at(deg, src[live], weight[live])
+    np.add.at(deg, dst[live], weight[live])
+    return deg
+
+
 def build_node_blocking(src, dst, weight, num_nodes: int,
                         *, block_n: int = 512, block_e: int = 128,
                         snap_chunks: bool = True) -> NodeBlocking:
@@ -109,37 +165,13 @@ def build_node_blocking(src, dst, weight, num_nodes: int,
     the compile key — and therefore the compiled-program count — stays
     logarithmic in graph skew).
     """
-    src = np.asarray(src, np.int64)
-    dst = np.asarray(dst, np.int64)
-    weight = np.asarray(weight, np.float32)
-    live = weight != 0.0
-    src, dst, weight = src[live], dst[live], weight[live]
     nb = max((num_nodes + block_n - 1) // block_n, 1)
     n_pad = nb * block_n
-    # directed half-edges: destination u, source o
-    u = np.concatenate([src, dst])
-    o = np.concatenate([dst, src])
-    w2 = np.concatenate([weight, weight])
-    blk = u // block_n
-    order = np.argsort(blk, kind="stable")  # deterministic layout
-    u, o, w2, blk = u[order], o[order], w2[order], blk[order]
-    counts = np.bincount(blk, minlength=nb)
-    c = max(int(np.ceil(counts.max(initial=0) / block_e)), 1)
-    if snap_chunks:
-        c = next_pow2(c)
-    ul = np.zeros((nb, c * block_e), np.int32)
-    ot = np.zeros((nb, c * block_e), np.int32)
-    wt = np.zeros((nb, c * block_e), np.float32)
-    offs = np.concatenate([[0], np.cumsum(counts)])
-    for b in range(nb):
-        lo, hi = offs[b], offs[b + 1]
-        m = hi - lo
-        ul[b, :m] = u[lo:hi] - b * block_n
-        ot[b, :m] = o[lo:hi]
-        wt[b, :m] = w2[lo:hi]
-    deg = np.zeros((n_pad,), np.float32)
-    np.add.at(deg, src, weight)
-    np.add.at(deg, dst, weight)
+    u, o, w2, counts = _block_sorted_half_edges(src, dst, weight,
+                                                block_n, nb)
+    c = _chunks_for_counts(counts, block_e, snap_chunks)
+    ul, ot, wt = _fill_buckets(u, o, w2, counts, nb, c, block_n, block_e)
+    deg = _weighted_degrees(src, dst, weight, n_pad)
     return NodeBlocking(
         u_local=jnp.asarray(ul.reshape(-1)),
         other=jnp.asarray(ot.reshape(-1)),
@@ -149,6 +181,142 @@ def build_node_blocking(src, dst, weight, num_nodes: int,
         block_e=block_e,
         chunks_per_block=c,
         num_nodes=int(num_nodes),
+    )
+
+
+class ShardedNodeBlocking(NamedTuple):
+    """Per-shard node-blocked half-edge layouts for mesh-parallel matvecs.
+
+    The edge buffer is split into ``num_shards`` contiguous slices (the
+    :func:`repro.core.distributed.pad_edges_for_mesh` contract) and each
+    slice is bucketed INDEPENDENTLY by destination node-block, exactly
+    like :func:`build_node_blocking` does for the whole buffer.  All
+    shards share ONE static layout — the chunk count is pow2-snapped to
+    the worst shard — so the stacked arrays drop straight into a
+    ``shard_map`` with the shard axis partitioned over the mesh's edge
+    axes, and every shard compiles against identical shapes.
+
+    The matvec decomposes per shard as ``L_s v = deg_s * v - A_s v``
+    with ``deg_s`` the weighted degrees of THAT SHARD's edges only, so
+    the one psum of the (n, k) panel reconstructs
+    ``sum_s L_s v = L v`` exactly (no double-counted diagonal).  A shard
+    whose slice holds zero live edges (all capacity padding) gets an
+    all-zero layout in the same shapes: its kernel output is exactly
+    zero and the psum is unaffected.
+    """
+
+    u_local: jax.Array  # (S, NB*C*BE) int32 — dest index local to block
+    other: jax.Array  # (S, NB*C*BE) int32 — global source node
+    weight: jax.Array  # (S, NB*C*BE) float32 — 0 => padding slot
+    deg: jax.Array  # (S, NB*block_n) float32 — PER-SHARD weighted degrees
+    block_n: int  # static
+    block_e: int  # static
+    chunks_per_block: int  # C, shared across shards (static, pow2)
+    num_nodes: int  # real node count n (static)
+    num_shards: int  # S (static)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.deg.shape[1] // self.block_n
+
+    @property
+    def padded_nodes(self) -> int:
+        return self.deg.shape[1]
+
+    def shard(self, s: int) -> NodeBlocking:
+        """Single-shard view — what one mesh device computes with."""
+        return NodeBlocking(
+            u_local=self.u_local[s], other=self.other[s],
+            weight=self.weight[s], deg=self.deg[s],
+            block_n=self.block_n, block_e=self.block_e,
+            chunks_per_block=self.chunks_per_block,
+            num_nodes=self.num_nodes)
+
+    @property
+    def statics(self) -> dict:
+        """The compile-key statics, as kwargs for
+        :func:`shard_local_blocking` (and tick-program builders)."""
+        return dict(block_n=self.block_n, block_e=self.block_e,
+                    chunks_per_block=self.chunks_per_block,
+                    num_nodes=self.num_nodes)
+
+
+def shard_local_blocking(u_local, other, weight, deg, *, block_n: int,
+                         block_e: int, chunks_per_block: int,
+                         num_nodes: int) -> NodeBlocking:
+    """One device's NodeBlocking from shard_map-LOCAL slices of a
+    :class:`ShardedNodeBlocking`'s stacked arrays (the leading shard
+    axis is partitioned down to size 1 inside the shard_map body).  The
+    single place the slice-and-rewrap wiring lives, so every shard_map
+    call site stays in sync when the layout grows fields.
+    """
+    return NodeBlocking(
+        u_local=u_local[0], other=other[0], weight=weight[0], deg=deg[0],
+        block_n=block_n, block_e=block_e,
+        chunks_per_block=chunks_per_block, num_nodes=num_nodes)
+
+
+def build_sharded_node_blocking(src, dst, weight, num_nodes: int,
+                                num_shards: int,
+                                *, block_n: int = 512, block_e: int = 128,
+                                snap_chunks: bool = True
+                                ) -> ShardedNodeBlocking:
+    """Host-side per-shard node blockings of a mesh-padded edge buffer.
+
+    ``len(src)`` must divide evenly by ``num_shards`` (pad the buffer
+    with :func:`repro.core.distributed.pad_edges_for_mesh` first); shard
+    ``s`` owns the ``s``-th contiguous slice, matching how a
+    ``P(edge_axes)`` sharding splits the same buffer on the mesh.  The
+    chunk count is resolved ONCE across shards (max bucket anywhere,
+    pow2-snapped), so an all-padding shard still materializes the shared
+    layout — all zero weights and zero degrees — instead of a
+    shape-mismatched empty one.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    e = src.shape[0]
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if e % num_shards != 0:
+        raise ValueError(
+            f"edge buffer ({e}) does not divide into {num_shards} shards;"
+            " pad with distributed.pad_edges_for_mesh first")
+    per = e // num_shards
+    nb = max((num_nodes + block_n - 1) // block_n, 1)
+    n_pad = nb * block_n
+    shards = [
+        _block_sorted_half_edges(
+            src[s * per:(s + 1) * per], dst[s * per:(s + 1) * per],
+            weight[s * per:(s + 1) * per], block_n, nb)
+        for s in range(num_shards)
+    ]
+    # ONE chunk count for every shard: shard_map needs identical static
+    # shapes per device, and snapping to the worst shard keeps the
+    # compile key stable under admission-time edge balance wobble.
+    c = _chunks_for_counts(
+        np.stack([counts for _, _, _, counts in shards]).reshape(-1),
+        block_e, snap_chunks)
+    ul = np.zeros((num_shards, nb, c * block_e), np.int32)
+    ot = np.zeros((num_shards, nb, c * block_e), np.int32)
+    wt = np.zeros((num_shards, nb, c * block_e), np.float32)
+    deg = np.zeros((num_shards, n_pad), np.float32)
+    for s, (u, o, w2, counts) in enumerate(shards):
+        ul[s], ot[s], wt[s] = _fill_buckets(u, o, w2, counts, nb, c,
+                                            block_n, block_e)
+        deg[s] = _weighted_degrees(
+            src[s * per:(s + 1) * per], dst[s * per:(s + 1) * per],
+            weight[s * per:(s + 1) * per], n_pad)
+    return ShardedNodeBlocking(
+        u_local=jnp.asarray(ul.reshape(num_shards, -1)),
+        other=jnp.asarray(ot.reshape(num_shards, -1)),
+        weight=jnp.asarray(wt.reshape(num_shards, -1)),
+        deg=jnp.asarray(deg),
+        block_n=block_n,
+        block_e=block_e,
+        chunks_per_block=c,
+        num_nodes=int(num_nodes),
+        num_shards=int(num_shards),
     )
 
 

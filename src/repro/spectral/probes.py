@@ -212,6 +212,72 @@ def probe_edge_arrays(
         num_probes=num_probes, num_steps=num_steps, n_real=n_real)
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_probe_program(mesh, edge_axes: tuple, num_nodes: int,
+                           num_probes: int, num_steps: int, backend: str):
+    """Compiled sharded-SLQ program, cached per (mesh, shapes, config).
+
+    ONE shard_mapped program wraps the whole quadrature: probe vectors
+    are vmapped inside on replicated panels and every Lanczos matvec is
+    a per-shard kernel followed by one psum over the edge axes — the
+    probe distributes exactly like the solve it tunes.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import backend as backend_mod
+
+    b = backend_mod.resolve_for_arrays(backend, num_nodes)
+    interp = backend_mod.kernel_interpret()
+    spec_e = P(edge_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_e, P(), P()),
+        out_specs=P(),
+        check_vma=False)  # Lanczos scan carries mixed-replication values
+    def probe(src, dst, weight, key, n_real):
+        local = backend_mod.edge_arrays_matvec_fn(
+            src, dst, weight, b, num_nodes=num_nodes, interpret=interp)
+
+        def mv(v):
+            return jax.lax.psum(local(v), edge_axes)
+
+        return slq_probe(mv, num_nodes, key,
+                         num_probes=num_probes, num_steps=num_steps,
+                         n_real=n_real)
+
+    return jax.jit(probe)
+
+
+def probe_sharded_edge_arrays(
+    mesh,
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    key: jax.Array,
+    n_real: jax.Array,
+    *,
+    num_nodes: int,
+    edge_axes=("data",),
+    num_probes: int = 4,
+    num_steps: int = 24,
+    backend: str = "segment",
+) -> ProbeResult:
+    """SLQ over MESH-SHARDED edge buffers (stream.sharded's probe path).
+
+    Semantically identical to :func:`probe_edge_arrays` — same Lanczos
+    recurrence, same keys, the matvec is just psum-assembled from edge
+    shards — so the streaming service's dilation anchors match between
+    sharded and single-device serving up to collective summation order.
+    The edge buffer's length must divide evenly by the mesh's edge-axis
+    shard count (the store's balanced capacity invariant).
+    """
+    program = _sharded_probe_program(
+        mesh, tuple(edge_axes), num_nodes, num_probes, num_steps, backend)
+    return program(src, dst, weight, key, n_real)
+
+
 def probe_graph(
     g: EdgeList,
     key: jax.Array | None = None,

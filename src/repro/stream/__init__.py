@@ -29,6 +29,12 @@ service
     same-shaped sessions), per-session convergence via panel residuals,
     eviction, streaming updates routed through the incremental path,
     and label serving.
+sharded
+    Mesh-parallel serving (``ServiceConfig(mesh=...)``): whole-class
+    ticks as one shard_mapped fused series program — edge buffers or
+    per-shard node blockings partitioned over the mesh's edge axes, one
+    psum of the stacked panels per dilation matvec, shard-balanced
+    capacities, sharded admission probes.
 tracking
     Stable cluster ids across re-solves: greedy maximum-overlap matching
     of each new k-means labelling onto the previous one.

@@ -300,3 +300,26 @@ def node_blocking(store: GraphStore, *, block_n: int = 512,
         np.asarray(store.src), np.asarray(store.dst),
         np.asarray(store.weight), store.num_nodes,
         block_n=min(block_n, store.num_nodes), block_e=block_e)
+
+
+def sharded_node_blocking(store: GraphStore, num_shards: int,
+                          *, block_n: int = 512, block_e: int = 128):
+    """Per-shard node-blocked layouts of the store's edge buffer for the
+    mesh-parallel pallas tick (stream.sharded) — the sharded sibling of
+    :func:`node_blocking`, cached alongside it by the owner and
+    invalidated the same way (edge mutations stale it).
+
+    The buffer's capacity must divide evenly into ``num_shards`` — the
+    balance invariant admission/growth maintain via
+    ``stream.sharded.balanced_capacity``.  Each shard's contiguous slice
+    is bucketed independently with ONE shared pow2-snapped chunk count,
+    so all shards (and all similar-skew sessions of a capacity class)
+    compile against the same shapes; an all-padding slice yields an
+    all-zero layout contributing exact zeros to the psum.
+    """
+    from repro.core import backend as backend_mod
+
+    return backend_mod.build_sharded_node_blocking(
+        np.asarray(store.src), np.asarray(store.dst),
+        np.asarray(store.weight), store.num_nodes, num_shards,
+        block_n=min(block_n, store.num_nodes), block_e=block_e)

@@ -95,12 +95,29 @@ class ServiceConfig:
     # chunk count is pow2-snapped, so compile counts stay logarithmic.
     backend: str = "auto"
     tick_block_n: int = 512  # node-block rows per VMEM panel slice
+    # Device mesh for SHARDED serving (stream.sharded): when set, every
+    # capacity-class tick runs as one shard_mapped fused series program
+    # with the class's edge buffers (segment) or per-shard node
+    # blockings (pallas) partitioned over `edge_axes`, one psum of the
+    # stacked panels per dilation matvec, and admission probes routed
+    # through the same sharded matvec.  Admission/growth round edge
+    # capacities up to a multiple of the shard count so shard slices
+    # stay balanced.  None = single-device ticks (the default).
+    mesh: object | None = None
+    edge_axes: tuple = ("data",)
 
     def __post_init__(self):
         if self.degree % 2 == 0:
             raise ValueError("degree must be odd (limit_neg_exp series)")
         if self.backend not in backend_mod.BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.mesh is not None:
+            missing = [a for a in self.edge_axes
+                       if a not in self.mesh.axis_names]
+            if missing:
+                raise ValueError(
+                    f"edge_axes {missing} not in mesh axes "
+                    f"{self.mesh.axis_names}")
 
 
 @dataclasses.dataclass
@@ -116,6 +133,9 @@ class _Session:
     tau: float  # effective dilation strength (config, capped per probe)
     tracker: tracking.LabelTracker
     blocking: es_ops.NodeBlocking | None = None  # pallas tick layout cache
+    # per-shard layout cache for sharded pallas ticks (stream.sharded);
+    # invalidated together with `blocking` on edge mutations
+    sharded_blocking: es_ops.ShardedNodeBlocking | None = None
     group_key: tuple | None = None  # last tick-group key (occupancy anchor)
     est: updates.EigenEstimate | None = None
     converged: bool = False
@@ -164,12 +184,26 @@ class StreamingService:
     label serving, eviction."""
 
     def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        from repro.stream import sharded as sharded_mod
+
         self.cfg = cfg
         self._backend = backend_mod.resolve_backend(cfg.backend)
+        self._mesh = cfg.mesh
+        self._num_shards = (
+            sharded_mod.num_edge_shards(cfg.mesh, cfg.edge_axes)
+            if cfg.mesh is not None else 1)
         self._sessions: dict[str, _Session] = {}
         self._compiled: dict[tuple, object] = {}
         self._admitted = 0
         self._probes_run = 0
+
+    def _balanced(self, capacity: int) -> int:
+        """Edge capacity rounded up to a shard-balanced size."""
+        from repro.stream import sharded as sharded_mod
+
+        if self._num_shards <= 1:
+            return capacity
+        return sharded_mod.balanced_capacity(capacity, self._num_shards)
 
     # ------------------------------------------------------------------
     # spectral probing
@@ -194,19 +228,36 @@ class StreamingService:
         lam_k = None
         if cfg.probe_spectrum and n > 1:
             self._probes_run += 1
-            probe = spectral_probes.probe_edge_arrays(
-                store.src, store.dst, store.weight,
-                jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 7),
-                                   self._probes_run),
-                jnp.asarray(n, jnp.int32),
-                num_nodes=store.num_nodes,
-                num_probes=cfg.probe_vectors,
-                # NOT clamped to n: probe_steps is jit-static, and the
-                # Lanczos recurrence handles m >= n via sticky breakdown,
-                # so the compile stays shared across the capacity class.
-                num_steps=cfg.probe_steps,
-                backend=self._backend,
-            )
+            probe_key = jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed + 7), self._probes_run)
+            if self._mesh is not None:
+                # Sharded serving probes through the SAME psum-assembled
+                # matvec the tick programs run, so the rho anchoring the
+                # per-session dilation rescale is measured per shard and
+                # agrees with single-device serving up to collective
+                # summation order.
+                probe = spectral_probes.probe_sharded_edge_arrays(
+                    self._mesh, store.src, store.dst, store.weight,
+                    probe_key, jnp.asarray(n, jnp.int32),
+                    num_nodes=store.num_nodes,
+                    edge_axes=cfg.edge_axes,
+                    num_probes=cfg.probe_vectors,
+                    num_steps=cfg.probe_steps,
+                    backend=self._backend,
+                )
+            else:
+                probe = spectral_probes.probe_edge_arrays(
+                    store.src, store.dst, store.weight, probe_key,
+                    jnp.asarray(n, jnp.int32),
+                    num_nodes=store.num_nodes,
+                    num_probes=cfg.probe_vectors,
+                    # NOT clamped to n: probe_steps is jit-static, and
+                    # the Lanczos recurrence handles m >= n via sticky
+                    # breakdown, so the compile stays shared across the
+                    # capacity class.
+                    num_steps=cfg.probe_steps,
+                    backend=self._backend,
+                )
             est = float(probe.lambda_max)
             if np.isfinite(est) and est > 0.0:
                 rho = min(est, rho_ub)
@@ -253,7 +304,9 @@ class StreamingService:
                 f"eigenvectors (drop_trivial={cfg.drop_trivial}) but "
                 f"ServiceConfig.k={cfg.k}")
         node_cap = node_capacity_class(g.num_nodes)
-        store = gs.from_edge_list(g, capacity=edge_capacity,
+        cap = (gs.capacity_class(g.num_edges) if edge_capacity is None
+               else edge_capacity)
+        store = gs.from_edge_list(g, capacity=self._balanced(cap),
                                   num_nodes=node_cap)
         store, rho, rho_ub, lam_k = self._rho_estimate(store, g.num_nodes)
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
@@ -305,8 +358,11 @@ class StreamingService:
             # apply is functional) and re-apply the whole batch, growing
             # again until nothing drops (a batch can exceed one ladder
             # step).  The session changes capacity class, so its next
-            # tick joins a different group.
+            # tick joins a different group.  Sharded serving keeps the
+            # grown capacity a multiple of the shard count.
             base = gs.grow(base)
+            if base.capacity != self._balanced(base.capacity):
+                base = gs.grow(base, self._balanced(base.capacity))
             store, dw, stats = gs.apply_edge_batch(base, batch, mode=mode)
         # Ordinary batches rescale cheaply: track the probed estimate by
         # the Gershgorin bound's relative change (no probe matvecs), cap
@@ -315,7 +371,9 @@ class StreamingService:
         store, rho_ub = gs.spectral_radius_upper_bound(store)
         rho_ub_new = float(rho_ub)
         sess.store = store
-        sess.blocking = None  # edge mutation stales the pallas layout
+        # edge mutation stales the pallas layouts (single and sharded)
+        sess.blocking = None
+        sess.sharded_blocking = None
         if sess.rho_ub > 0.0:
             rho_new = min(rho_ub_new,
                           sess.rho * rho_ub_new / sess.rho_ub)
@@ -388,8 +446,14 @@ class StreamingService:
 
     def _ensure_blocking(self, sess: _Session) -> None:
         """Build (or rebuild after updates) the session's node-blocked
-        layout for pallas ticks — host-side, cached on the session."""
-        if sess.blocking is None:
+        layout for pallas ticks — host-side, cached on the session.
+        Sharded serving builds the per-shard variant instead."""
+        if self._mesh is not None:
+            if sess.sharded_blocking is None:
+                sess.sharded_blocking = gs.sharded_node_blocking(
+                    sess.store, self._num_shards,
+                    block_n=self.cfg.tick_block_n)
+        elif sess.blocking is None:
             sess.blocking = gs.node_blocking(
                 sess.store, block_n=self.cfg.tick_block_n)
 
@@ -398,18 +462,22 @@ class StreamingService:
 
         Segment groups by capacity class; pallas additionally groups by
         the blocking's static layout (block size and pow2-snapped chunk
-        count), since those are the shapes the kernel compiles against.
+        count), since those are the shapes the kernel compiles against —
+        sharded pallas uses the per-shard layout's statics the same way.
         A converged session whose blocking was invalidated by updates
         keeps its LAST group key — it won't tick, so no layout rebuild,
         but it must keep anchoring its old group's occupancy bucket
         (shrinking buckets would recompile the tick program).
         """
         if self._backend == "pallas":
-            if (sess.blocking is None and sess.converged
+            cached = (sess.sharded_blocking if self._mesh is not None
+                      else sess.blocking)
+            if (cached is None and sess.converged
                     and sess.group_key is not None):
                 return sess.group_key
             self._ensure_blocking(sess)
-            b = sess.blocking
+            b = (sess.sharded_blocking if self._mesh is not None
+                 else sess.blocking)
             key = (self._class_key(sess), b.block_n, b.chunks_per_block,
                    b.block_e)
         else:
@@ -418,9 +486,22 @@ class StreamingService:
         return key
 
     def _get_step(self, key: tuple, occupancy: int):
+        from repro.stream import sharded as sharded_mod
+
         fn = self._compiled.get((key, occupancy))
         if fn is None:
-            if self._backend == "pallas":
+            cfg = self.cfg
+            if self._mesh is not None and self._backend == "pallas":
+                (node_cap, _), block_n, chunks, block_e = key
+                fn = sharded_mod.build_tick_program_pallas(
+                    self._mesh, cfg.edge_axes, cfg.method, cfg.degree,
+                    cfg.steps_per_tick, cfg.lr,
+                    block_n, block_e, chunks, node_cap)
+            elif self._mesh is not None:
+                fn = sharded_mod.build_tick_program_segment(
+                    self._mesh, cfg.edge_axes, cfg.method, cfg.degree,
+                    cfg.steps_per_tick, cfg.lr)
+            elif self._backend == "pallas":
                 _, block_n, chunks, block_e = key
                 fn = self._build_step_pallas(block_n, chunks, block_e)
             else:
@@ -526,7 +607,12 @@ class StreamingService:
             idx = list(range(len(members))) + [0] * (occ - len(members))
             stack = lambda f: jnp.stack([f(members[i]) for i in idx])
             cs = jnp.asarray([members[i].c for i in idx], jnp.float32)
-            if self._backend == "pallas":
+            if self._mesh is not None and self._backend == "pallas":
+                from repro.stream import sharded as sharded_mod
+
+                vs, res = step(*sharded_mod.tick_group_arrays_pallas(
+                    [members[i] for i in idx]))
+            elif self._backend == "pallas" and self._mesh is None:
                 vs, res = step((
                     stack(lambda s: s.blocking.u_local),
                     stack(lambda s: s.blocking.other),
@@ -536,6 +622,9 @@ class StreamingService:
                     cs,
                 ))
             else:
+                # single-device segment AND sharded segment take the
+                # same stacked-edge-buffer signature (stream.sharded
+                # shards the capacity axis over the mesh)
                 vs, res = step(
                     stack(lambda s: s.store.src),
                     stack(lambda s: s.store.dst),

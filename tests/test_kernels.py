@@ -149,6 +149,168 @@ def test_edge_spmm_node_blocked_property(seed):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+# --- node-blocking layout properties (single-device + per-shard) ----------
+
+def _rand_blocking_case(seed: int):
+    rng = np.random.default_rng(seed)
+    e = int(rng.integers(1, 300))
+    n = int(rng.integers(8, 200))
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    proper = src != dst  # self-loops excluded: a half-edge (u, u, w)
+    src, dst = src[proper], dst[proper]  # cancels against deg in L v
+    # DISTINCT weights so the half-edge multiset comparison is exact,
+    # with some zero (capacity-padding) slots mixed in
+    w = (np.arange(1, len(src) + 1, dtype=np.float32)
+         * rng.uniform(0.5, 1.5)).astype(np.float32)
+    w[rng.uniform(size=len(src)) < 0.2] = 0.0
+    block_n = int(rng.choice([8, 16, 32, 64]))
+    return src, dst, w, n, block_n
+
+
+def _half_edge_multiset(src, dst, w):
+    """Expected live half-edges {(u, o, w)}: two per live edge."""
+    live = w != 0.0
+    s, d, ww = src[live], dst[live], w[live]
+    return sorted(zip(np.concatenate([s, d]).tolist(),
+                      np.concatenate([d, s]).tolist(),
+                      np.concatenate([ww, ww]).tolist()))
+
+
+def _blocking_half_edges(nb: es_ops.NodeBlocking):
+    """Live half-edges a blocking actually materialized, globalized."""
+    per_block = nb.chunks_per_block * nb.block_e
+    ul = np.asarray(nb.u_local).reshape(-1, per_block)
+    ot = np.asarray(nb.other).reshape(-1, per_block)
+    wt = np.asarray(nb.weight).reshape(-1, per_block)
+    out = []
+    for b in range(ul.shape[0]):
+        live = wt[b] != 0.0
+        out.extend(zip((ul[b, live] + b * nb.block_n).tolist(),
+                       ot[b, live].tolist(), wt[b, live].tolist()))
+    return sorted(out)
+
+
+def _check_blocking_covers_each_half_edge_once(seed: int):
+    src, dst, w, n, block_n = _rand_blocking_case(seed)
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
+    assert _blocking_half_edges(nb) == _half_edge_multiset(src, dst, w)
+    # degrees match the live edges too
+    deg = np.zeros(nb.padded_nodes, np.float32)
+    np.add.at(deg, src, w)
+    np.add.at(deg, dst, w)
+    np.testing.assert_allclose(np.asarray(nb.deg), deg, rtol=1e-6)
+
+
+def _check_sharded_blocking_covers_each_half_edge_once(seed: int):
+    """Per-shard variant: shard s covers exactly ITS slice's half-edges
+    (so the union covers everything once), per-shard degrees sum to the
+    global degrees, and the chunk count is shared and pow2."""
+    src, dst, w, n, block_n = _rand_blocking_case(seed)
+    num_shards = int(np.random.default_rng(seed + 1).choice([2, 4, 8]))
+    pad = (-len(src)) % num_shards
+    src = np.concatenate([src, np.zeros(pad, src.dtype)])
+    dst = np.concatenate([dst, np.zeros(pad, dst.dtype)])
+    w = np.concatenate([w, np.zeros(pad, np.float32)])
+    sb = es_ops.build_sharded_node_blocking(src, dst, w, n, num_shards,
+                                            block_n=block_n)
+    per = len(src) // num_shards
+    assert sb.chunks_per_block == es_ops.next_pow2(sb.chunks_per_block)
+    for s in range(num_shards):
+        sl = slice(s * per, (s + 1) * per)
+        assert (_blocking_half_edges(sb.shard(s))
+                == _half_edge_multiset(src[sl], dst[sl], w[sl])), s
+    deg = np.zeros(sb.padded_nodes, np.float32)
+    np.add.at(deg, src, w)
+    np.add.at(deg, dst, w)
+    np.testing.assert_allclose(
+        np.asarray(sb.deg).sum(axis=0), deg, rtol=1e-5, atol=1e-6)
+
+
+def _check_blocking_node_permutation_invariance(seed: int):
+    """Relabeling nodes commutes with the blocked matvec: permuting the
+    graph and the panel permutes the result — the layout (which nodes
+    share a block) is an implementation detail, not a semantics."""
+    rng = np.random.default_rng(seed)
+    src, dst, w, n, block_n = _rand_blocking_case(seed)
+    k = int(rng.integers(1, 5))
+    v = rng.normal(size=(n, k)).astype(np.float32)
+    perm = rng.permutation(n)
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
+    nb_p = es_ops.build_node_blocking(perm[src], perm[dst], w, n,
+                                      block_n=block_n)
+    out = np.asarray(es_ops.edge_spmm_blocked(nb, jnp.asarray(v), **I))
+    v_p = np.empty_like(v)
+    v_p[perm] = v
+    out_p = np.asarray(es_ops.edge_spmm_blocked(nb_p, jnp.asarray(v_p), **I))
+    np.testing.assert_allclose(out_p[perm], out, rtol=2e-4, atol=2e-4)
+
+
+def _check_blocking_chunks_pow2_snapped(seed: int):
+    src, dst, w, n, block_n = _rand_blocking_case(seed)
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
+    raw = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n,
+                                     snap_chunks=False)
+    assert nb.chunks_per_block == es_ops.next_pow2(raw.chunks_per_block)
+    assert raw.chunks_per_block <= nb.chunks_per_block \
+        < 2 * max(raw.chunks_per_block, 1)
+
+
+def _check_blocking_padding_inert(seed: int):
+    """Capacity padding is invisible: the blocking of a padded buffer is
+    bitwise the blocking of the live edges, and padding-only blocks
+    (and shards) contribute exact zeros to the matvec."""
+    rng = np.random.default_rng(seed)
+    src, dst, w, n, block_n = _rand_blocking_case(seed)
+    k = int(rng.integers(1, 5))
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    pad = int(rng.integers(1, 128))
+    src_p = np.concatenate([src, np.zeros(pad, src.dtype)])
+    dst_p = np.concatenate([dst, np.zeros(pad, dst.dtype)])
+    w_p = np.concatenate([w, np.zeros(pad, np.float32)])
+    nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
+    nb_p = es_ops.build_node_blocking(src_p, dst_p, w_p, n, block_n=block_n)
+    for a, b in zip(nb[:4], nb_p[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert nb.chunks_per_block == nb_p.chunks_per_block
+    # an all-padding shard is a zero operator (exact zeros, no NaN)
+    sb = es_ops.build_sharded_node_blocking(
+        np.zeros(16, np.int64), np.zeros(16, np.int64),
+        np.zeros(16, np.float32), n, 4, block_n=block_n)
+    out = np.asarray(es_ops.edge_spmm_blocked(sb.shard(0), v, **I))
+    np.testing.assert_array_equal(out, 0.0)
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_blocking_covers_each_half_edge_once(seed):
+    _check_blocking_covers_each_half_edge_once(seed)
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_sharded_blocking_covers_each_half_edge_once(seed):
+    _check_sharded_blocking_covers_each_half_edge_once(seed)
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_blocking_node_permutation_invariance(seed):
+    _check_blocking_node_permutation_invariance(seed)
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_blocking_chunks_pow2_snapped(seed):
+    _check_blocking_chunks_pow2_snapped(seed)
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_blocking_padding_inert(seed):
+    _check_blocking_padding_inert(seed)
+
+
 def test_limit_series_apply_edges_matches_dense():
     """Edge-list fused series == dense-kernel series == core.series."""
     from repro.core import graphs, laplacian_dense, limit_neg_exp
