@@ -45,6 +45,38 @@ def write_bench_json(name: str, rows, extra: dict | None = None) -> str:
     return path
 
 
+def bench_regressions(old: dict, new: dict,
+                      threshold: float = 0.25) -> list[str]:
+    """Key-metric diff between two BENCH payloads (``run.py --check``).
+
+    Flags a regression when a row shared by both payloads got more than
+    ``threshold`` slower (``us_per_call``), or when a top-level numeric
+    higher-is-better metric (key contains ``speedup``) dropped by more
+    than the same factor.  Rows/keys present on only one side are new
+    or retired metrics, not regressions.  Returns human-readable
+    messages (empty = no regression).
+    """
+    msgs = []
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    for r in new.get("rows", []):
+        o = old_rows.get(r["name"])
+        if o is None or o.get("us_per_call", 0) <= 0:
+            continue
+        if r["us_per_call"] > o["us_per_call"] * (1.0 + threshold):
+            msgs.append(
+                f"{r['name']}: us_per_call {o['us_per_call']:.0f} -> "
+                f"{r['us_per_call']:.0f} (> +{threshold:.0%})")
+    for key, val in new.items():
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            continue
+        o = old.get(key)
+        if not isinstance(o, (int, float)) or isinstance(o, bool) or o <= 0:
+            continue
+        if "speedup" in key and val < o / (1.0 + threshold):
+            msgs.append(f"{key}: {o:.3g} -> {val:.3g} (< -{threshold:.0%})")
+    return msgs
+
+
 def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     """Median wall time per call in microseconds (jits + blocks)."""
     for _ in range(warmup):

@@ -28,14 +28,17 @@ def main() -> None:
         lr=0.3, tol=5e-3, dilation_strength=6.0))
 
     print(f"== admitting {NUM_GRAPHS} SBM graphs (n={N}, {BLOCKS} blocks)")
-    truth = {}
+    truth, gdict = {}, {}
     for i in range(NUM_GRAPHS):
         g, labels = graphs.sbm_graph(N, BLOCKS, p_in=0.25, p_out=0.01,
                                      seed=i)
         sid = f"tenant-{i}"
         svc.add_graph(sid, g, num_clusters=BLOCKS, edge_capacity=8192)
         truth[sid] = labels
-        print(f"   {sid}: {g.num_edges} edges")
+        gdict[sid] = g
+        print(f"   {sid}: {g.num_edges} edges "
+              f"(planned degree={svc.session_info(sid)['degree']}, "
+              f"tau={svc.session_info(sid)['tau']:.0f})")
 
     ticks = svc.run_until_converged(max_ticks=200)
     status = "converged" if svc.all_converged else "NOT converged"
@@ -87,6 +90,18 @@ def main() -> None:
               f"solves={summary['solves']} "
               f"incremental={summary['incremental_updates']} "
               f"fallbacks={summary['fallbacks']}")
+
+    # ---- panel caching: an evicted tenant re-admits warm ---------------
+    sid = "tenant-1"
+    summary = done[sid]
+    print(f"== re-admitting {sid} from its cached panel")
+    svc.add_graph(sid, gdict[sid], num_clusters=BLOCKS,
+                  edge_capacity=8192, resume_panel=summary["panel"])
+    svc.run_until_converged(max_ticks=50)
+    info = svc.session_info(sid)
+    print(f"   reconverged in {info['ticks']} tick(s) vs "
+          f"{summary['ticks']} at cold admission "
+          f"(residual={info['residual']:.1e})")
 
 
 if __name__ == "__main__":

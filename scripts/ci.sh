@@ -20,4 +20,18 @@ python -m pytest -q -m "pallas and not slow"
 # inherited device-count flag must not override the lane's 8)
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python -m pytest -q -m "distributed and not slow"
-exec python -m pytest -q -m "not slow and not stochastic and not pallas and not distributed" "$@"
+python -m pytest -q -m "not slow and not stochastic and not pallas and not distributed" "$@"
+# Perf-trajectory gate (NON-BLOCKING): re-run the streaming bench and
+# diff its freshly written BENCH_stream.json key metrics against the
+# committed file; >25% regressions are surfaced but do not fail CI —
+# wall-clock noise on shared runners is real, a red tier-1 is not.
+# run.py exits 2 for a metric regression, 1 for a crashed bench module:
+# word the (still non-blocking) warning accordingly so a broken bench
+# is not mistaken for wall-clock noise.
+bench_status=0
+python -m benchmarks.run --check --only stream || bench_status=$?
+if [ "$bench_status" -eq 2 ]; then
+    echo "[ci] WARNING: bench --check reported a >25% perf regression (non-blocking)"
+elif [ "$bench_status" -ne 0 ]; then
+    echo "[ci] WARNING: bench --check FAILED TO RUN (exit $bench_status) — a bench module crashed (non-blocking)"
+fi

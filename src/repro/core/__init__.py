@@ -55,3 +55,11 @@ from repro.core.clustering import (  # noqa: F401
     exact_cluster_reference,
     spectral_cluster,
 )
+from repro.core.program import (  # noqa: F401
+    StepSchedule,
+    apply_solver_step,
+    build_tick_program,
+    run_chunk,
+    run_program,
+    schedule_degrees,
+)

@@ -215,6 +215,34 @@ def distributed_series_operator(
     return lambda v: series_program(gp.src, gp.dst, gp.weight, v)
 
 
+def distributed_solve(
+    mesh: Mesh,
+    g: EdgeList,
+    series: SpectralSeries,
+    cfg,
+    edge_axes=("data",),
+    backend: str = "auto",
+    block_n: int | None = None,
+    v_star=None,
+    init_v=None,
+):
+    """One-shot distributed solve: the whole-series shard_mapped
+    operator driven by THE unified solve loop
+    (:func:`repro.core.program.run_program`) — the same step
+    construction the one-shot, streaming, and sharded tick paths run.
+
+    ``cfg`` is a :class:`repro.core.solvers.SolverConfig`; returns
+    ``(state, trace)`` exactly like ``run_solver``.
+    """
+    from repro.core import program
+
+    op = distributed_series_operator(
+        mesh, g, series, edge_axes=edge_axes, backend=backend,
+        block_n=block_n)
+    return program.run_program(op, g.num_nodes, cfg, v_star=v_star,
+                               init_v=init_v)
+
+
 def distributed_minibatch_operator(
     mesh: Mesh,
     g: EdgeList,

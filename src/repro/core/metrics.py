@@ -46,6 +46,14 @@ def panel_residual(v: jax.Array, av: jax.Array, eps: float = 1e-30) -> jax.Array
     return jnp.linalg.norm(r) / jnp.maximum(jnp.linalg.norm(av), eps)
 
 
+def operator_residual(matvec, v: jax.Array) -> jax.Array:
+    """``panel_residual`` of a panel under an operator: one operator
+    application + the block-Rayleigh residual.  The single residual
+    evaluation every solve program (one-shot, streaming ticks, sharded,
+    warm reconvergence) ends its compiled loop with."""
+    return panel_residual(v, matvec(v))
+
+
 def ground_truth_bottom_k(l_mat: jax.Array, k: int, drop_trivial: bool = False):
     """Bottom-k eigenpairs of dense L via eigh (ascending).
 

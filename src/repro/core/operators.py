@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as backend_mod
 from repro.core import laplacian as lap
+from repro.core import metrics
 from repro.core.series import SpectralSeries
 
 MatVec = Callable[[jax.Array], jax.Array]
@@ -38,6 +39,38 @@ MatVec = Callable[[jax.Array], jax.Array]
 
 def dense_matvec(l_mat: jax.Array) -> MatVec:
     return lambda v: l_mat @ v
+
+
+def dilated_operator_arrays(src: jax.Array, dst: jax.Array, w: jax.Array,
+                            c, degree: int) -> MatVec:
+    """``V -> (I - c L)^degree V`` on raw edge arrays — the dilated
+    reversed operator of one streaming session (the paper's
+    limit_neg_exp series with lambda* = 0, unit-normalized).  ``c`` may
+    be traced (per-session scales, one program); ``degree`` is static.
+    THE single definition of this operator form: the streaming
+    service's residual checks and every tick program's segment source
+    (`core.program`) close over it.
+    """
+    def opv(v: jax.Array) -> jax.Array:
+        def body(_, u):
+            return u - c * lap.edge_matvec_arrays(src, dst, w, u)
+        return jax.lax.fori_loop(0, degree, body, v)
+
+    return opv
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def dilated_matvec_arrays(src, dst, w, v, c, degree: int):
+    """Jitted ``(I - c L)^degree V`` (was ``stream.service._op_apply``)."""
+    return dilated_operator_arrays(src, dst, w, c, degree)(v)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def dilated_panel_residual(src, dst, w, v, c, degree: int):
+    """Panel residual under the dilated reversed operator (was
+    ``stream.service._op_residual``)."""
+    return metrics.operator_residual(
+        dilated_operator_arrays(src, dst, w, c, degree), v)
 
 
 def edge_matvec(g: lap.EdgeList, backend: str = "auto",

@@ -1,0 +1,545 @@
+"""Unified solve programs: ONE dilated solve loop for every deployment shape.
+
+Before this module the repo carried four hand-rolled copies of the same
+iteration — ``core.solvers.run_solver``'s eval loop, the streaming
+service's segment and pallas tick builders, and ``stream.sharded``'s
+shard_mapped tick programs — so every convergence improvement (adaptive
+lr, probe-driven degrees, smarter stopping) had to be implemented four
+times or not at all.  The builders here own the composition
+
+    dilated matvec  x  mu-EG/Oja step  x  residual evaluation
+
+as one compiled unit, parameterized along three axes:
+
+* **operator source** — raw edge arrays (segment gather/scatter), a
+  node-blocked pallas layout with the dilation AXPY fused into the
+  kernel epilogue, or per-shard sharded layouts whose matvecs psum
+  under ``shard_map``;
+* **batching shape** — a single panel (`run_chunk`, `run_program`), a
+  vmapped/``lax.map``-ped session group (`build_tick_program` without a
+  mesh), or a shard_mapped capacity class (`build_tick_program` with a
+  mesh);
+* **a** :class:`StepSchedule` — the compile-relevant statics (solver
+  method, dilation degree, steps per invocation), derived from a
+  session's :class:`~repro.spectral.plan.DilationPlan` instead of fixed
+  constants, while the per-session learning rate and dilation scale
+  ride as TRACED inputs so adaptive per-session hyperparameters never
+  grow the compile cache.
+
+:func:`apply_solver_step` is THE single construction site of the
+mu-EG/Oja dilated solver step; ``core.solvers.run_solver``,
+``stream.service``'s tick programs, ``stream.warm``'s chunk runner, and
+``core.distributed``'s whole-series solves are thin wrappers over the
+loops below.
+
+The scheduling helpers at the bottom (`contraction_rate`,
+`predicted_residual`, `predicted_steps_to_tol`) turn observed residual
+decay into step forecasts — the streaming service's residual-decay tick
+scheduler and its predicted-contraction stopping are built on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import backend as backend_mod
+from repro.core import metrics, operators, solvers
+from repro.core import laplacian as lap
+from repro.kernels.edge_spmm import ops as es_ops
+
+MatVec = Callable[[jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepSchedule:
+    """Compile-relevant hyperparameters of one solve-program invocation.
+
+    ``method`` / ``degree`` / ``steps`` / ``backend`` are STATIC — they
+    are part of the compile-cache key, and adaptive layers must only
+    move them on snapped grids (see :func:`schedule_degrees`).  ``lr``
+    is advisory metadata for SINGLE-PANEL callers (a plan-derived step
+    size to feed ``run_chunk``/``SolverConfig``); the group tick
+    builders never read it — their learning rates always arrive as the
+    traced per-session ``lrs`` input, so per-session values are free
+    (no recompilation).
+    """
+
+    method: str = "mu_eg"  # "mu_eg" | "oja"
+    degree: int = 15  # dilation degree of the (I - c L)^degree operator
+    steps: int = 20  # solver steps per program invocation
+    lr: float = 0.3  # advisory: single-panel callers; ticks trace lrs
+    backend: str = "auto"  # repro.core.backend
+
+    @property
+    def statics(self) -> tuple:
+        """The compile-cache key contribution of this schedule."""
+        return (self.method, self.degree, self.steps, self.backend)
+
+    @classmethod
+    def from_plan(cls, plan, *, steps: int, base_lr: float,
+                  method: str = "mu_eg", backend: str = "auto",
+                  max_degree: int | None = None,
+                  normalized: bool = True) -> "StepSchedule":
+        """Derive (lr, degree) from a :class:`DilationPlan`.
+
+        ``normalized=True`` is the tick-program form ``(I - c L)^degree``
+        whose TOP eigenvalue is 1 by construction (an identity plan runs
+        as degree 1 with ``c = 1/lambda_star`` — the scaled operator and
+        the rescaled ``suggested_lr`` cancel exactly for the linear
+        mu-EG/Oja updates), so the lr is instead normalized to the
+        plan's WANTED-direction scale (:func:`session_lr`) — the axis
+        along which plans genuinely differ.  ``normalized=False`` keeps
+        ``plan.suggested_lr`` verbatim for callers driving the raw
+        reversed operator ``lambda* I - S(L)`` (one-shot solves over
+        ``planned_operator``).
+        """
+        degree = 1 if plan.family == "identity" else int(plan.degree)
+        if max_degree is not None:
+            cap = max_degree if max_degree % 2 == 1 else max_degree - 1
+            degree = min(degree, max(cap, 1))
+        if normalized:
+            lr = session_lr(plan, base_lr)
+        else:
+            lr = plan.suggested_lr(base_lr)
+        return cls(method=method, degree=degree, steps=steps, lr=lr,
+                   backend=backend)
+
+
+def wanted_scale(plan) -> float:
+    """Transformed operator value of the slowest WANTED direction.
+
+    Dilation deliberately decays the wanted spread — the planner allows
+    ``tau * lam_k / rho`` up to ``MAX_WANTED_DECAY``, i.e. wanted
+    directions down to ``exp(-1.5) ~ 0.22`` — and the mu-EG/Oja utility
+    gradient of that trailing direction scales with this value, so a
+    step size tuned for a unit-scale direction under-steps it by
+    exactly this factor.  This is the denominator of the per-session lr
+    normalization (:func:`session_lr`).
+    """
+    if plan.family == "identity":
+        lam_star = max(plan.lambda_star, 1e-30)
+        return max(1.0 - plan.lam_k / lam_star, 1e-3)
+    if plan.rho <= 0.0 or not math.isfinite(plan.rho):
+        return 1.0
+    return math.exp(-plan.tau * min(plan.lam_k, plan.rho) / plan.rho)
+
+
+# The top direction still sees operator value 1, so the wanted-scale lr
+# boost must stay inside the solver's stable step range.
+LR_BOOST_CAP = 2.0
+
+
+def session_lr(plan, base_lr: float, boost_cap: float = LR_BOOST_CAP
+               ) -> float:
+    """Plan-driven per-session step size for the unit-normalized tick
+    program form: the base lr boosted by the inverse wanted-direction
+    scale (capped).  Strongly dilated tenants — whose trailing wanted
+    eigenvalue the transform decayed hardest — take proportionally
+    larger steps; tenants with their wanted spread intact keep the
+    base lr."""
+    return base_lr * min(1.0 / max(wanted_scale(plan), 1e-3), boost_cap)
+
+
+def dilation_scale(plan, degree: int) -> float:
+    """Per-matvec scale ``c`` of the ``(I - c L)^degree`` program form.
+
+    For the exp-family plans this is the series step ``tau / (rho *
+    degree)``; an identity plan maps onto degree 1 with ``c = 1 /
+    lambda_star`` (the unit-normalized reversed identity — see
+    :meth:`StepSchedule.from_plan` for why the lr needs no compensation).
+    """
+    if plan.family == "identity":
+        return 1.0 / max(plan.lambda_star, 1e-30)
+    return plan.scale / max(degree, 1)
+
+
+def schedule_degrees(max_degree: int) -> tuple[int, ...]:
+    """Every degree a plan-derived schedule may take under ``max_degree``.
+
+    The planner emits degrees only from the snapped tau grid (plus the
+    identity's degree 1 and the budget-truncation fallback), so
+    per-class degree re-planning moves on THIS set — the compile-cache
+    economy bound asserted by the schedule-plumbing tests.
+    """
+    from repro.spectral import plan as plan_mod
+
+    degs = {1, plan_mod.MIN_DEGREE}
+    for t in plan_mod.TAU_GRID:
+        d = int(math.ceil(plan_mod.DEGREE_PER_TAU * t))
+        d = d if d % 2 == 1 else d + 1
+        degs.add(max(d, plan_mod.MIN_DEGREE))
+    degs.add(max(max_degree if max_degree % 2 == 1 else max_degree - 1, 1))
+    return tuple(sorted(d for d in degs if d <= max_degree))
+
+
+# ---------------------------------------------------------------------------
+# the solver step — THE single construction site
+# ---------------------------------------------------------------------------
+
+def apply_solver_step(step_fn, state: solvers.SolverState, av: jax.Array,
+                      lr) -> solvers.SolverState:
+    """THE construction site of the mu-EG/Oja dilated solver step.
+
+    Every solve loop in the repo — one-shot, streaming segment/pallas
+    ticks, sharded class ticks, distributed series solves, warm
+    reconvergence chunks — applies its solver update through this call;
+    nothing else composes an operator application with a solver step.
+    """
+    return step_fn(state, av, lr)
+
+
+# ---------------------------------------------------------------------------
+# single-panel loops
+# ---------------------------------------------------------------------------
+
+def run_chunk(opv: MatVec, step_fn, state: solvers.SolverState, lr,
+              steps: int) -> tuple[solvers.SolverState, jax.Array]:
+    """``steps`` dilated solver steps on one panel + one residual eval.
+
+    The building block of ``stream.warm``'s chunked reconvergence and of
+    the per-session tick bodies (which batch it via vmap/``lax.map``).
+    """
+    def body(st, _):
+        return apply_solver_step(step_fn, st, opv(st.v), lr), None
+
+    state, _ = jax.lax.scan(body, state, None, length=steps)
+    return state, metrics.operator_residual(opv, state.v)
+
+
+def run_program(
+    operator,
+    n: int,
+    cfg: solvers.SolverConfig,
+    v_star: jax.Array | None = None,
+    stochastic: bool = False,
+    init_v: jax.Array | None = None,
+) -> tuple[solvers.SolverState, "solvers.Trace"]:
+    """One-shot solve with ground-truth traces — ``run_solver``'s engine.
+
+    One jitted scan over eval chunks (Python overhead O(1) in steps);
+    ``init_v`` warm-starts from an (n, k) panel via ``init_from_panel``.
+    Stochastic operators take a per-step PRNG key.
+    """
+    step_fn = solvers.make_step_fn(cfg.method, cfg.backend)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, init_key = jax.random.split(key)
+    if init_v is None:
+        state0 = solvers.init_state(init_key, n, cfg.k)
+    else:
+        state0 = solvers.init_from_panel(init_v)
+    num_evals = max(1, cfg.steps // cfg.eval_every)
+    if v_star is None:
+        v_star = jnp.zeros((n, cfg.k))
+
+    def one_step(state, key_step):
+        if stochastic:
+            av = operator(key_step, state.v)
+        else:
+            av = operator(state.v)
+        return apply_solver_step(step_fn, state, av, cfg.lr), None
+
+    def eval_chunk(state, chunk_keys):
+        state, _ = jax.lax.scan(one_step, state, chunk_keys)
+        m = (
+            state.step,
+            metrics.subspace_error(state.v, v_star),
+            metrics.eigenvector_streak(state.v, v_star),
+        )
+        return state, m
+
+    keys = jax.random.split(key, num_evals * cfg.eval_every).reshape(
+        num_evals, cfg.eval_every, -1)
+
+    run = jax.jit(lambda s, ks: jax.lax.scan(eval_chunk, s, ks))
+    final, (steps, err, streak) = run(state0, keys)
+    return final, solvers.Trace(steps=steps, subspace_error=err,
+                                streak=streak)
+
+
+# ---------------------------------------------------------------------------
+# batched (session-group) loop
+# ---------------------------------------------------------------------------
+
+def _group_loop(opv_all, step_all, vs, lrs, steps: int, chunks):
+    """The batched dilated solve loop every tick program runs.
+
+    ``opv_all``: (G, n, k) -> (G, n, k) dilated-operator application for
+    the whole stacked group (psums live inside it on sharded sources);
+    ``step_all`` maps the solver step over the group axis (vmap on
+    segment, ``lax.map`` on pallas — its grids don't vmap).
+
+    ``chunks`` is the residual-decay scheduler's tick MULTIPLIER: the
+    program runs ``chunks * steps`` solver steps before its single
+    residual evaluation.  It is a TRACED scalar (the static scan of
+    ``steps`` steps repeats under a ``fori_loop`` with a traced bound),
+    so scheduled multi-chunk ticks reuse the exact compiled program of
+    a plain tick — the adaptive layer costs zero recompilation.
+    """
+    state = solvers.SolverState(
+        v=vs, step=jnp.zeros((vs.shape[0],), jnp.int32))
+
+    def body(st, _):
+        return step_all(st, opv_all(st.v), lrs), None
+
+    def chunk_body(_, st):
+        st, _ = jax.lax.scan(body, st, None, length=steps)
+        return st
+
+    state = jax.lax.fori_loop(0, chunks, chunk_body, state)
+    avs = opv_all(state.v)
+    return state.v, jax.vmap(metrics.panel_residual)(state.v, avs)
+
+
+def _vmapped_step(step_fn):
+    def step_all(st, avs, lrs):
+        return jax.vmap(
+            lambda s, av, lr: apply_solver_step(step_fn, s, av, lr)
+        )(st, avs, lrs)
+    return step_all
+
+
+def _mapped_step(step_fn):
+    """``lax.map`` variant for pallas steps (kernel grids don't vmap)."""
+    def step_all(st, avs, lrs):
+        return jax.lax.map(
+            lambda args: apply_solver_step(
+                step_fn,
+                solvers.SolverState(v=args[0], step=args[1]),
+                args[2], args[3]),
+            (st.v, st.step, avs, lrs))
+    return step_all
+
+
+def _blocked_opv_all(u_local, other, w, deg, cs, degree: int,
+                     block_n: int, chunks: int, block_e: int,
+                     interpret: bool, edge_axes=None):
+    """Group dilated operator over stacked node-blocked pallas layouts.
+
+    With ``edge_axes`` the layouts are per-shard (leading shard axis
+    inside each device's slice) and every matvec psums; the dilation
+    AXPY then applies post-psum (the collective is the fusion barrier).
+    Without it the single-device kernel fuses ``alpha=-c, beta=1`` into
+    its epilogue.
+    """
+    def local_mv(args):
+        # shard_map-local slices: the leading shard axis is partitioned
+        # down to size 1 inside the body (es_ops.shard_local_blocking)
+        ul, ot, wt, dg, x = args
+        nb = es_ops.shard_local_blocking(
+            ul, ot, wt, dg, block_n=block_n, block_e=block_e,
+            chunks_per_block=chunks, num_nodes=x.shape[0])
+        return es_ops.edge_spmm_blocked(nb, x, interpret=interpret)
+
+    def fused_mv(args):
+        ul, ot, wt, dg, x, c = args
+        nb = es_ops.NodeBlocking(
+            u_local=ul, other=ot, weight=wt, deg=dg, block_n=block_n,
+            block_e=block_e, chunks_per_block=chunks,
+            num_nodes=x.shape[0])
+        return es_ops.edge_spmm_blocked(nb, x, alpha=-c, beta=1.0,
+                                        interpret=interpret)
+
+    def opv_all(us):
+        def body(_, xs):
+            if edge_axes is not None:
+                lxs = jax.lax.psum(
+                    jax.lax.map(local_mv, (u_local, other, w, deg, xs)),
+                    edge_axes)
+                return xs - cs[:, None, None] * lxs
+            return jax.lax.map(fused_mv, (u_local, other, w, deg, xs, cs))
+        return jax.lax.fori_loop(0, degree, body, us)
+
+    return opv_all
+
+
+def build_tick_segment(schedule: StepSchedule):
+    """Single-device segment tick: fn(src, dst, w, vs, cs, lrs, chunks).
+
+    Inputs are the group's stacked (G, cap) edge buffers, (G, n, k)
+    panels, traced per-session (G,) dilation scales / learning rates,
+    and the traced chunk multiplier; one compiled program per
+    (schedule statics, shapes).
+    """
+    step_fn = solvers.STEP_FNS[schedule.method]
+    degree, steps = schedule.degree, schedule.steps
+
+    def tick(src, dst, w, vs, cs, lrs, chunks):
+        def opv_all(us):
+            return jax.vmap(
+                lambda s, d, wt, x, c:
+                operators.dilated_operator_arrays(s, d, wt, c, degree)(x)
+            )(src, dst, w, us, cs)
+
+        return _group_loop(opv_all, _vmapped_step(step_fn), vs, lrs,
+                           steps, chunks)
+
+    return jax.jit(tick)
+
+
+def build_tick_pallas(schedule: StepSchedule, block_n: int,
+                      chunks_per_block: int, block_e: int):
+    """Single-device pallas tick:
+    fn(u_local, other, w, deg, vs, cs, lrs, chunks).
+
+    The dilated matvec runs the node-blocked incidence-SpMM kernel with
+    the dilation AXPY (alpha=-c, beta=1) fused into its epilogue, and
+    the solver step uses the fused mu-EG kernel; sessions advance under
+    ``lax.map`` (pallas grids don't vmap across the session axis).
+    """
+    interp = backend_mod.kernel_interpret()
+    step_fn = solvers.make_step_fn(schedule.method, "pallas")
+    degree, steps = schedule.degree, schedule.steps
+
+    def tick(u_local, other, w, deg, vs, cs, lrs, chunks):
+        opv_all = _blocked_opv_all(u_local, other, w, deg, cs, degree,
+                                   block_n, chunks_per_block, block_e,
+                                   interp)
+        return _group_loop(opv_all, _mapped_step(step_fn), vs, lrs,
+                           steps, chunks)
+
+    return jax.jit(tick)
+
+
+def build_tick_sharded_segment(schedule: StepSchedule, mesh, edge_axes):
+    """Sharded segment tick: the group's stacked (G, cap) edge buffers
+    shard over ``edge_axes`` along the capacity axis; each dilation step
+    is the per-shard vmapped gather/scatter + ONE psum of the stacked
+    (G, n, k) panels (same decomposition as PR 4's tick programs)."""
+    step_fn = solvers.STEP_FNS[schedule.method]
+    degree, steps = schedule.degree, schedule.steps
+    spec_e = P(None, edge_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_e, P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)  # scan carries mix varying/unvarying values
+    def tick(src, dst, w, vs, cs, lrs, chunks):
+        local_mv = jax.vmap(lap.edge_matvec_arrays)
+
+        def opv_all(us):
+            def body(_, xs):
+                lxs = jax.lax.psum(local_mv(src, dst, w, xs), edge_axes)
+                return xs - cs[:, None, None] * lxs
+            return jax.lax.fori_loop(0, degree, body, us)
+
+        return _group_loop(opv_all, _vmapped_step(step_fn), vs, lrs,
+                           steps, chunks)
+
+    return jax.jit(tick)
+
+
+def build_tick_sharded_pallas(schedule: StepSchedule, mesh, edge_axes,
+                              block_n: int, chunks_per_block: int,
+                              block_e: int):
+    """Sharded pallas tick: per-shard node-blocked kernels + one psum.
+
+    fn(u_local, other, w, deg, vs, cs, lrs, chunks) with (G, S, ...)
+    stacked per-shard layouts sharded over ``edge_axes`` along the
+    shard axis; the AXPY applies post-psum (beta must apply exactly
+    once, so the kernel-epilogue fusion is single-device-only) and the
+    solver step maps the fused mu-EG kernel under ``lax.map``.
+    """
+    interp = backend_mod.kernel_interpret()
+    step_fn = solvers.make_step_fn(schedule.method, "pallas")
+    degree, steps = schedule.degree, schedule.steps
+    spec_b = P(None, edge_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_b, spec_b, spec_b, spec_b, P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)  # pallas_call has no replication rule
+    def tick(u_local, other, w, deg, vs, cs, lrs, chunks):
+        opv_all = _blocked_opv_all(u_local, other, w, deg, cs, degree,
+                                   block_n, chunks_per_block, block_e,
+                                   interp, edge_axes=edge_axes)
+        return _group_loop(opv_all, _mapped_step(step_fn), vs, lrs,
+                           steps, chunks)
+
+    return jax.jit(tick)
+
+
+def build_tick_program(schedule: StepSchedule, *, layout=None, mesh=None,
+                       edge_axes=("data",)):
+    """One compiled batched tick program for a session group.
+
+    ``layout`` is None for the segment operator source or the pallas
+    blocking statics ``(block_n, chunks_per_block, block_e)``; ``mesh``
+    switches to the shard_mapped variants.  The streaming service keys
+    the returned program by its (capacity class, degree, layout,
+    occupancy bucket, schedule statics); the per-session lr/scale AND
+    the scheduler's tick multiplier are traced inputs — the whole
+    adaptive layer moves underneath one compiled program.
+    """
+    if mesh is not None and layout is not None:
+        return build_tick_sharded_pallas(schedule, mesh, edge_axes, *layout)
+    if mesh is not None:
+        return build_tick_sharded_segment(schedule, mesh, edge_axes)
+    if layout is not None:
+        return build_tick_pallas(schedule, *layout)
+    return build_tick_segment(schedule)
+
+
+# ---------------------------------------------------------------------------
+# residual-decay forecasting (the adaptive scheduler's math)
+# ---------------------------------------------------------------------------
+
+def contraction_rate(res_prev: float, res: float,
+                     steps: int) -> float | None:
+    """Measured per-step residual decay ratio, or None when the pair of
+    observations carries no usable contraction signal (non-finite,
+    non-positive, zero steps, or not actually decaying)."""
+    if steps <= 0 or not (math.isfinite(res_prev) and math.isfinite(res)):
+        return None
+    if not (0.0 < res < res_prev):
+        return None
+    return (res / res_prev) ** (1.0 / steps)
+
+
+def predicted_residual(res: float, rate: float, steps: int) -> float:
+    """Forecast the panel residual after ``steps`` more solver steps."""
+    return res * rate ** steps
+
+
+def predicted_steps_to_tol(res: float, rate: float | None,
+                           tol: float) -> int:
+    """Predicted-contraction stopping: solver steps until the residual
+    is forecast to reach ``tol`` (0 when already there; a large sentinel
+    when the rate predicts no convergence)."""
+    if res <= tol:
+        return 0
+    if rate is None or not (0.0 < rate < 1.0):
+        return 1 << 30
+    return int(math.ceil(math.log(tol / res) / math.log(rate)))
+
+
+__all__ = [
+    "StepSchedule",
+    "apply_solver_step",
+    "build_tick_pallas",
+    "build_tick_program",
+    "build_tick_segment",
+    "build_tick_sharded_pallas",
+    "build_tick_sharded_segment",
+    "contraction_rate",
+    "dilation_scale",
+    "predicted_residual",
+    "predicted_steps_to_tol",
+    "run_chunk",
+    "run_program",
+    "schedule_degrees",
+    "session_lr",
+    "wanted_scale",
+]

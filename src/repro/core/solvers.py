@@ -26,8 +26,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metrics
-
 MatVec = Callable[[jax.Array], jax.Array]
 # stochastic operators additionally take a PRNG key
 StochMatVec = Callable[[jax.Array, jax.Array], jax.Array]
@@ -148,45 +146,18 @@ def run_solver(
 ) -> tuple[SolverState, Trace]:
     """Run a solver, recording metrics against ground truth v_star.
 
-    The whole run is one jitted scan over eval chunks, so Python overhead
-    is O(1) in the number of steps.  `init_v` warm-starts from an (n, k)
-    panel (orthonormalized via `init_from_panel`) instead of the default
-    random init — the streaming service's reconvergence path.
+    Thin wrapper over :func:`repro.core.program.run_program` — the
+    unified solve loop shared with the streaming tick programs and the
+    distributed solves.  The whole run is one jitted scan over eval
+    chunks, so Python overhead is O(1) in the number of steps.  `init_v`
+    warm-starts from an (n, k) panel (orthonormalized via
+    `init_from_panel`) instead of the default random init — the
+    streaming service's reconvergence path.
     """
-    step_fn = make_step_fn(cfg.method, cfg.backend)
-    key = jax.random.PRNGKey(cfg.seed)
-    key, init_key = jax.random.split(key)
-    if init_v is None:
-        state0 = init_state(init_key, n, cfg.k)
-    else:
-        state0 = init_from_panel(init_v)
-    num_evals = max(1, cfg.steps // cfg.eval_every)
-    if v_star is None:
-        v_star = jnp.zeros((n, cfg.k))
+    from repro.core import program  # deferred: program builds on solvers
 
-    def one_step(carry, key_step):
-        state = carry
-        if stochastic:
-            av = operator(key_step, state.v)
-        else:
-            av = operator(state.v)
-        return step_fn(state, av, cfg.lr), None
-
-    def eval_chunk(state, chunk_keys):
-        state, _ = jax.lax.scan(one_step, state, chunk_keys)
-        m = (
-            state.step,
-            metrics.subspace_error(state.v, v_star),
-            metrics.eigenvector_streak(state.v, v_star),
-        )
-        return state, m
-
-    keys = jax.random.split(key, num_evals * cfg.eval_every).reshape(
-        num_evals, cfg.eval_every, -1)
-
-    run = jax.jit(lambda s, ks: jax.lax.scan(eval_chunk, s, ks))
-    final, (steps, err, streak) = run(state0, keys)
-    return final, Trace(steps=steps, subspace_error=err, streak=streak)
+    return program.run_program(operator, n, cfg, v_star=v_star,
+                               stochastic=stochastic, init_v=init_v)
 
 
 def steps_to_tolerance(trace: Trace, tol: float) -> int:

@@ -126,6 +126,14 @@ def _next_odd(x: float) -> int:
     return d if d % 2 == 1 else d + 1
 
 
+def identity_lambda_star(rho: float) -> float:
+    """Eq. (8) reversal shift for the identity family: just above the
+    spectral-radius estimate.  THE single definition — the streaming
+    service's ordinary-batch rho rescale moves a session's shift with
+    this same rule, so the update path and a fresh re-plan agree."""
+    return rho * 1.01 + 1e-6
+
+
 def wanted_decay_cap(lam_k: float, rho: float) -> float:
     """Largest tau keeping tau * lambda_k / rho <= MAX_WANTED_DECAY.
 
@@ -136,6 +144,9 @@ def wanted_decay_cap(lam_k: float, rho: float) -> float:
     return MAX_WANTED_DECAY / max(lam_k / max(rho, 1e-30), 1e-3)
 
 
+FAMILIES = ("identity", "limit_neg_exp", "cheb_neg_exp")
+
+
 def plan_dilation(
     probe: probes_mod.ProbeResult | None,
     k: int,
@@ -144,6 +155,9 @@ def plan_dilation(
     source: str = "slq",
     lam_k: float | None = None,
     lam_k1: float | None = None,
+    rho: float | None = None,
+    tau_cap: float | None = None,
+    families: tuple = FAMILIES,
 ) -> DilationPlan:
     """Select (family, degree, tau, rho, lambda_star) from a probe.
 
@@ -152,8 +166,16 @@ def plan_dilation(
     caps the probed radius (the bound is certain, the probe is not) and
     carries the plan alone when ``probe`` is None or non-finite —
     callers inside jit-sensitive paths keep working with probing off.
-    Explicit ``lam_k``/``lam_k1`` override the probe's bottom-edge
-    localizer for callers that know their spectrum.
+    Explicit ``lam_k``/``lam_k1``/``rho`` override the probe's
+    bottom-edge localizer and ``lambda_max`` for callers that carry
+    their own estimates (the streaming service re-plans from cached
+    probe anchors without re-probing).  ``tau_cap`` bounds the strength
+    like the wanted-decay cap (a configured ``dilation_strength``
+    ceiling); ``families`` restricts the transform families a caller's
+    compiled program set can execute — the streaming tick programs only
+    evaluate the ``(I - c L)^degree`` form, so they exclude
+    ``cheb_neg_exp`` and the planner weakens tau into the budget
+    instead.
 
     Monotone by construction: for fixed lambda_k and rho, a larger
     probed bottom gap never yields a larger degree (wider gaps need
@@ -162,11 +184,15 @@ def plan_dilation(
     """
     if budget < 1:
         raise ValueError(f"budget {budget} < 1 matvec")
-    rho = float("nan")
     probe_matvecs = 0
     if probe is not None:
-        rho = float(probe.lambda_max)
         probe_matvecs = int(probe.num_matvecs)
+    if rho is not None:
+        rho = float(rho)
+    elif probe is not None:
+        rho = float(probe.lambda_max)
+    else:
+        rho = float("nan")
     if rho_fallback is not None:
         rho = min(rho, float(rho_fallback)) if math.isfinite(rho) \
             else float(rho_fallback)
@@ -187,24 +213,28 @@ def plan_dilation(
     lam_k1 = min(max(float(lam_k1), lam_k), rho)
     gamma = (lam_k1 - lam_k) / rho
 
-    if gamma >= GAMMA_IDENTITY:
+    if gamma >= GAMMA_IDENTITY and "identity" in families:
         # Raw spectrum is already well separated at k; the reversed
         # identity (lambda* just above rho, Eq. 8) converges fine and
         # costs ONE matvec per application.
         return DilationPlan(
             family="identity", degree=1, tau=0.0, rho=rho,
-            lambda_star=rho * 1.01 + 1e-6, gamma=gamma,
+            lambda_star=identity_lambda_star(rho), gamma=gamma,
             lam_k=lam_k, lam_k1=lam_k1,
             probe_matvecs=probe_matvecs, source=source)
 
     tau_needed = TARGET_LOG_GAP / max(gamma, 1e-3)
     tau = next((t for t in TAU_GRID if t >= tau_needed), TAU_GRID[-1])
-    # Cap: keep the wanted eigenvalues alive (see MAX_WANTED_DECAY).
+    # Cap: keep the wanted eigenvalues alive (see MAX_WANTED_DECAY),
+    # intersected with any caller-configured strength ceiling.
     # Snapped DOWN so the cap wins conflicts; lam_k <= rho guarantees
-    # the cap is >= MAX_WANTED_DECAY, which the grid floor covers.
-    tau_cap = wanted_decay_cap(lam_k, rho)
-    if tau > tau_cap:
-        below = [t for t in TAU_GRID if t <= tau_cap]
+    # the wanted-decay cap is >= MAX_WANTED_DECAY, which the grid floor
+    # covers.
+    cap = wanted_decay_cap(lam_k, rho)
+    if tau_cap is not None:
+        cap = min(cap, float(tau_cap))
+    if tau > cap:
+        below = [t for t in TAU_GRID if t <= cap]
         tau = below[-1] if below else TAU_GRID[0]
     degree = max(_next_odd(DEGREE_PER_TAU * tau), MIN_DEGREE)
     family = "limit_neg_exp"
@@ -212,7 +242,7 @@ def plan_dilation(
         # The safe limit-series degree does not fit: first try the
         # Chebyshev fit of the same map (lower degree, same accuracy)...
         cheb_degree = _next_odd(CHEB_DEGREE_PER_TAU * tau + CHEB_DEGREE_PAD)
-        if cheb_degree <= budget:
+        if cheb_degree <= budget and "cheb_neg_exp" in families:
             return DilationPlan(
                 family="cheb_neg_exp", degree=cheb_degree, tau=tau, rho=rho,
                 lambda_star=0.0, gamma=gamma, lam_k=lam_k, lam_k1=lam_k1,

@@ -24,17 +24,21 @@ updates
     edge-weight deltas, with an accumulated-drift bound that triggers
     automatic fallback to a full (warm-started) SPED re-solve.
 service
-    Multi-tenant session manager: admission into capacity classes,
-    batched jitted ticks (one compiled program per class, vmapped over
-    same-shaped sessions), per-session convergence via panel residuals,
-    eviction, streaming updates routed through the incremental path,
-    and label serving.
+    Multi-tenant session manager: admission into capacity classes with
+    probe-driven DilationPlans (per-session lr/scale traced, per-class
+    degree re-planned on the snapped planner grid), batched jitted
+    ticks built by repro.core.program (one compiled program per
+    (class, degree, layout, occupancy, multiplier)), the residual-decay
+    tick scheduler, per-session convergence via panel residuals
+    (converged sessions cost zero device work), eviction with panel
+    caching (``add_graph(resume_panel=)`` re-admission), streaming
+    updates routed through the incremental path, and label serving.
 sharded
-    Mesh-parallel serving (``ServiceConfig(mesh=...)``): whole-class
-    ticks as one shard_mapped fused series program — edge buffers or
-    per-shard node blockings partitioned over the mesh's edge axes, one
-    psum of the stacked panels per dilation matvec, shard-balanced
-    capacities, sharded admission probes.
+    Mesh-parallel serving policy (``ServiceConfig(mesh=...)``):
+    shard-balanced capacities and the per-shard decomposition contract;
+    the shard_mapped tick programs themselves live in
+    ``repro.core.program`` (one psum of the stacked panels per dilation
+    matvec, sharded admission probes).
 tracking
     Stable cluster ids across re-solves: greedy maximum-overlap matching
     of each new k-means labelling onto the previous one.
@@ -68,6 +72,7 @@ from repro.stream.tracking import LabelTracker, match_labels  # noqa: F401
 from repro.stream.updates import (  # noqa: F401
     EigenEstimate,
     UpdateConfig,
+    anchor_estimate_arrays,
     estimate_from_panel,
     first_order_update,
     should_fallback,

@@ -1,30 +1,51 @@
 """Multi-tenant streaming clustering service.
 
 Owns many mutable graphs (stream.graph_store), each with a live
-eigenvector panel, and advances them with BATCHED jitted ticks:
+eigenvector panel, and advances them with BATCHED jitted ticks built by
+:mod:`repro.core.program` — the ONE solve loop shared with the one-shot
+solver, the warm reconvergence path, and the distributed solves:
 
-  * Sessions are grouped by CAPACITY CLASS — (node_cap, edge_cap) — and
-    every group tick is ONE compiled program vmapped over the group's
-    stacked edge buffers and panels.  Shapes never depend on a session's
-    live edge count or real node count, so admitting graph #9 to a class
-    that already ticked reuses the compiled step (no per-session
-    recompilation).  Groups are padded to power-of-two occupancy with
-    replicas of the first session, so evictions only recompile when the
-    occupancy bucket changes (log2 many programs per class, ever).
+  * Sessions are grouped by CAPACITY CLASS — (node_cap, edge_cap) — plus
+    their scheduled dilation DEGREE (and, on pallas, the node-blocking
+    layout), and every group tick is ONE compiled `SolveProgram`
+    invocation over the group's stacked edge buffers and panels.  Shapes
+    never depend on a session's live edge count or real node count, so
+    admitting graph #9 to a class that already ticked reuses the
+    compiled step (no per-session recompilation).  Groups are padded to
+    power-of-two occupancy of their ACTIVE (unconverged) members, so the
+    compiled-program set stays logarithmic while converged sessions cost
+    ZERO device work per tick.
   * The per-session operator is the dilated reversed Laplacian
     (I - c L)^degree — the paper's limit_neg_exp series with λ* = 0 —
-    with the dilation scale c = strength / (ρ · degree) a TRACED
-    per-session input (different graphs, one program).  ρ is the SLQ
-    lambda_max estimate (repro.spectral), probed on admission and on
-    drift-triggered re-solves and capped by the Gershgorin
-    2·max-degree bound; the bound alone anchors the scale when probing
-    is disabled.
+    scheduled from a real :class:`~repro.spectral.plan.DilationPlan`:
+    admission/re-solve probes (SLQ lambda_max + bottom-edge gap) feed
+    ``plan_dilation``, which picks the per-session strength tau (capped
+    by the wanted-decay guard and the configured ceiling), the
+    per-CLASS degree (snapped onto the planner grid, re-planned on
+    admission drift — a new tenant needing more dilation raises the
+    class degree), and the per-session lr (``plan.suggested_lr``,
+    normalized to the unit-scale program form).  The dilation scale c
+    and lr are TRACED per-session inputs — different graphs, one
+    program.  Wide-gap tenants get identity plans: degree-1 groups that
+    spend ONE matvec per operator application.
   * Per-session convergence is the ground-truth-free panel residual;
-    converged sessions leave the tick rotation, get their eigen estimate
-    anchored (stream.updates), and serve labels until edge updates
-    arrive.  Updates take the cheap first-order eigen-update path and
-    only re-enter the solve rotation when accumulated drift triggers the
+    converged sessions leave the tick rotation entirely (their groups
+    shrink — zero device work), get their eigen estimate anchored
+    (stream.updates), and serve labels until edge updates arrive.
+    Updates take the cheap first-order eigen-update path and only
+    re-enter the solve rotation when accumulated drift triggers the
     fallback, warm-started per stream.warm's restart test.
+  * The RESIDUAL-DECAY TICK SCHEDULER (``tick_schedule=
+    "residual_decay"``, the default): each session's measured residual
+    decay rate forecasts its remaining solver steps
+    (core.program.predicted_steps_to_tol).  A group predicted to stay
+    far above tolerance after an ordinary tick skips the intermediate
+    residual evaluations by running one MULTIPLIED tick — the
+    multiplier is a TRACED chunk count inside the compiled program, so
+    scheduling adds ZERO compiles — fewer program invocations, fewer
+    eval operator applications, and fewer host round-trips to fleet
+    convergence, with identical solver math.
+    ``tick_schedule="round_robin"`` restores fixed-size ticks.
 
 Node padding invariant: panels keep EXACT zeros on rows >= the session's
 real node count.  No edge ever touches a padding node, and every solver
@@ -36,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from collections import defaultdict
 
 import jax
@@ -44,15 +66,21 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import kmeans as km
-from repro.core import laplacian as lap
-from repro.core import metrics, solvers
+from repro.core import operators, program, solvers
 from repro.kernels.edge_spmm import ops as es_ops
+from repro.spectral import plan as plan_mod
 from repro.spectral import probes as spectral_probes
 from repro.stream import graph_store as gs
-from repro.stream import tracking, updates, warm
+from repro.stream import tracking, updates
 
 
 _next_pow2 = es_ops.next_pow2
+
+# Families the tick programs can execute: the (I - c L)^degree form only
+# (identity rides as degree 1 with c = 1/lambda*); cheb recurrences need
+# the series evaluator, so the planner weakens tau into the budget
+# instead of switching family.
+_TICK_FAMILIES = ("identity", "limit_neg_exp")
 
 
 def node_capacity_class(num_nodes: int) -> int:
@@ -65,9 +93,9 @@ class ServiceConfig:
     k: int = 6  # eigenvectors tracked per session
     num_clusters: int = 4  # default clusters served per session
     method: str = "mu_eg"  # solver step: "mu_eg" | "oja"
-    lr: float = 0.3
-    degree: int = 15  # odd; series degree of the dilation polynomial
-    dilation_strength: float = 8.0
+    lr: float = 0.3  # base step size (per-session values trace over it)
+    degree: int = 15  # odd; BUDGET for the planned per-class degree
+    dilation_strength: float = 8.0  # ceiling on the planned tau
     steps_per_tick: int = 20  # solver steps per session per tick
     tol: float = 2e-3  # panel-residual convergence target
     restart_residual: float = 0.6  # warm.py restart test
@@ -91,13 +119,13 @@ class ServiceConfig:
     # node-blocked incidence-SpMM kernel with the dilation step fused
     # into its epilogue; the per-session blocking is built on admission
     # and rebuilt after edge updates (graph_store.node_blocking), and
-    # sessions group by (capacity class, blocking chunk count) — the
+    # sessions group by (capacity class, degree, blocking layout) — the
     # chunk count is pow2-snapped, so compile counts stay logarithmic.
     backend: str = "auto"
     tick_block_n: int = 512  # node-block rows per VMEM panel slice
-    # Device mesh for SHARDED serving (stream.sharded): when set, every
-    # capacity-class tick runs as one shard_mapped fused series program
-    # with the class's edge buffers (segment) or per-shard node
+    # Device mesh for SHARDED serving (core.program sharded builders):
+    # when set, every group tick runs as one shard_mapped fused series
+    # program with the group's edge buffers (segment) or per-shard node
     # blockings (pallas) partitioned over `edge_axes`, one psum of the
     # stacked panels per dilation matvec, and admission probes routed
     # through the same sharded matvec.  Admission/growth round edge
@@ -105,12 +133,25 @@ class ServiceConfig:
     # stay balanced.  None = single-device ticks (the default).
     mesh: object | None = None
     edge_axes: tuple = ("data",)
+    # Residual-decay tick scheduling: "residual_decay" forecasts each
+    # group's remaining solver steps from measured residual decay and
+    # multiplies the tick's step count (a TRACED chunk count — any
+    # multiplier reuses the group's one compiled program) when every
+    # member is predicted to stay above `eval_payoff * steps_per_tick`
+    # steps from tolerance — the intermediate residual evals would have
+    # no payoff.  "round_robin" = fixed-size ticks for every group.
+    tick_schedule: str = "residual_decay"
+    max_tick_multiplier: int = 8  # cap on the scheduled multiplier
+    eval_payoff: float = 2.0  # multiply only past this many plain ticks
 
     def __post_init__(self):
         if self.degree % 2 == 0:
             raise ValueError("degree must be odd (limit_neg_exp series)")
         if self.backend not in backend_mod.BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.tick_schedule not in ("round_robin", "residual_decay"):
+            raise ValueError(
+                f"unknown tick_schedule {self.tick_schedule!r}")
         if self.mesh is not None:
             missing = [a for a in self.edge_axes
                        if a not in self.mesh.axis_names]
@@ -127,47 +168,32 @@ class _Session:
     num_clusters: int
     store: gs.GraphStore
     v: jax.Array  # (node_cap, k) panel, zero rows >= n
-    c: float  # dilation scale per matvec
-    rho: float  # spectral-radius estimate anchoring c (probed or bound)
-    rho_ub: float  # Gershgorin bound at the time rho was set
-    tau: float  # effective dilation strength (config, capped per probe)
+    plan: plan_mod.DilationPlan  # the session's dilation schedule source
+    rho_ub: float  # Gershgorin bound at the time plan.rho was set
+    lr: float  # per-session step size (traced into the tick program)
+    plan_degree: int  # the session's own planned degree suggestion
     tracker: tracking.LabelTracker
     blocking: es_ops.NodeBlocking | None = None  # pallas tick layout cache
-    # per-shard layout cache for sharded pallas ticks (stream.sharded);
-    # invalidated together with `blocking` on edge mutations
+    # per-shard layout cache for sharded pallas ticks; invalidated
+    # together with `blocking` on edge mutations
     sharded_blocking: es_ops.ShardedNodeBlocking | None = None
-    group_key: tuple | None = None  # last tick-group key (occupancy anchor)
+    group_key: tuple | None = None  # last tick-group key (introspection)
     est: updates.EigenEstimate | None = None
     converged: bool = False
     residual: float = float("inf")
+    rate: float | None = None  # measured per-step residual decay ratio
     ticks: int = 0
     solves: int = 0  # full (re-)solve episodes entered
     incremental_updates: int = 0
     fallbacks: int = 0
 
+    @property
+    def rho(self) -> float:
+        return self.plan.rho
 
-_edge_mv = lap.edge_matvec_arrays
-
-
-@functools.partial(jax.jit, static_argnames=("degree",))
-def _op_apply(src, dst, w, v, c, degree):
-    """(I - c L)^degree V — the dilated reversed operator, one session."""
-    def body(_, u):
-        return u - c * _edge_mv(src, dst, w, u)
-    return jax.lax.fori_loop(0, degree, body, v)
-
-
-@functools.partial(jax.jit, static_argnames=("degree",))
-def _op_residual(src, dst, w, v, c, degree):
-    av = _op_apply(src, dst, w, v, c, degree)
-    return metrics.panel_residual(v, av)
-
-
-@jax.jit
-def _anchor_estimate(src, dst, w, v):
-    """λ = diag(Vᵀ L V) on the store's padded edge buffer."""
-    return updates.estimate_from_panel(
-        lambda x: _edge_mv(src, dst, w, x), v)
+    @property
+    def tau(self) -> float:
+        return self.plan.tau
 
 
 @functools.partial(jax.jit, static_argnames=("node_cap", "n", "k"))
@@ -196,6 +222,16 @@ class StreamingService:
         self._compiled: dict[tuple, object] = {}
         self._admitted = 0
         self._probes_run = 0
+        # scheduler/work accounting: program invocations and the
+        # device-work slots they spent (occupancy x solver steps) — the
+        # witnesses for "converged sessions cost zero device work".
+        self._tick_invocations = 0
+        self._device_work = 0
+        self._multiplied_ticks = 0  # invocations the scheduler stretched
+        # per-class degree map memo: degrees only move on admission /
+        # eviction / re-plans, so status sweeps (session_info per
+        # tenant) must not rebuild the map per session — O(S^2) fleets
+        self._class_degree_cache: dict[tuple, int] | None = None
 
     def _balanced(self, capacity: int) -> int:
         """Edge capacity rounded up to a shard-balanced size."""
@@ -206,26 +242,26 @@ class StreamingService:
         return sharded_mod.balanced_capacity(capacity, self._num_shards)
 
     # ------------------------------------------------------------------
-    # spectral probing
+    # spectral probing + dilation planning
     # ------------------------------------------------------------------
 
-    def _rho_estimate(self, store: gs.GraphStore, n: int
-                      ) -> tuple[gs.GraphStore, float, float, float | None]:
-        """(refreshed store, rho, rho_ub, lam_k) — the dilation anchors.
+    def _rho_estimate(self, store: gs.GraphStore, n: int) -> tuple:
+        """(refreshed store, rho, rho_ub, lam_k, lam_k1) — plan anchors.
 
         rho is the SLQ lambda_max estimate capped by the Gershgorin
         bound (the bound is certain, the probe is not); with probing
         disabled — or a degenerate probe — it IS the bound, which keeps
-        this path jit-friendly and dependency-free.  lam_k is the probed
-        k-th-smallest eigenvalue (None without a probe), feeding the
-        planner's over-dilation cap in `_set_scale`.  Probe compiles are
-        shared per capacity class (fixed edge/node shapes, traced n).
+        this path jit-friendly and dependency-free.  lam_k/lam_k1 are
+        the probed bottom-edge eigenvalues (None without a probe),
+        feeding the planner's strength/degree selection in
+        `_plan_session`.  Probe compiles are shared per capacity class
+        (fixed edge/node shapes, traced n).
         """
         cfg = self.cfg
         store, rho_ub = gs.spectral_radius_upper_bound(store)
         rho_ub = float(rho_ub)
         rho = rho_ub
-        lam_k = None
+        lam_k = lam_k1 = None
         if cfg.probe_spectrum and n > 1:
             self._probes_run += 1
             probe_key = jax.random.fold_in(
@@ -261,38 +297,75 @@ class StreamingService:
             est = float(probe.lambda_max)
             if np.isfinite(est) and est > 0.0:
                 rho = min(est, rho_ub)
-                lam_k = spectral_probes.bottom_edge(probe, cfg.k)[0]
-        return store, rho, rho_ub, lam_k
+                lam_k, lam_k1 = spectral_probes.bottom_edge(probe, cfg.k)
+        return store, rho, rho_ub, lam_k, lam_k1
 
-    def _set_scale(self, sess: _Session, rho: float, rho_ub: float,
-                   lam_k: float | None = None) -> None:
-        """Per-session dilation scale c = tau / (rho * degree).
+    def _plan_session(self, sess: _Session, rho: float, rho_ub: float,
+                      lam_k: float | None = None,
+                      lam_k1: float | None = None) -> None:
+        """Re-run the dilation planner on fresh probe anchors.
 
-        tau is the configured strength, re-planned down by the spectral
-        planner's wanted-decay cap when a probe localized lam_k (a tight
-        rho would otherwise DOUBLE the effective strength the constants
-        were tuned for, over-dilating tenants whose wanted spread is a
-        sizable fraction of rho); floored so dilation never vanishes.
-        Without fresh probe information (ordinary update batches) the
-        session's last planned tau carries over.
+        The plan carries the session's whole solve schedule: strength
+        tau (capped by the wanted-decay guard and
+        ``cfg.dilation_strength``), the degree suggestion (snapped onto
+        the planner grid, capped by the ``cfg.degree`` budget — the
+        class degree is the max over its members' suggestions), and the
+        per-session lr (normalized to the plan's wanted-direction scale
+        — see ``core.program.session_lr``).
         """
-        from repro.spectral.plan import TAU_GRID, wanted_decay_cap
-
-        if lam_k is not None and rho > 0.0:
-            tau = self.cfg.dilation_strength
-            sess.tau = max(min(tau, wanted_decay_cap(lam_k, rho)),
-                           min(tau, TAU_GRID[0]))
-        sess.rho = rho
+        cfg = self.cfg
+        sess.plan = plan_mod.plan_dilation(
+            None, k=cfg.k, budget=cfg.degree,
+            rho_fallback=rho_ub,
+            rho=rho if rho > 0.0 else None,
+            lam_k=lam_k, lam_k1=lam_k1,
+            tau_cap=cfg.dilation_strength,
+            families=_TICK_FAMILIES,
+            source="slq" if lam_k is not None else "fallback")
         sess.rho_ub = rho_ub
-        sess.c = float(sess.tau / (max(rho, 1e-30) * self.cfg.degree))
+        sess.plan_degree = (1 if sess.plan.family == "identity"
+                            else sess.plan.degree)
+        # step size normalized to the plan's WANTED-direction scale
+        # (core.program.session_lr): strongly dilated tenants take
+        # proportionally larger steps — the lr rides traced, so the
+        # per-session values share one compiled program
+        sess.lr = program.session_lr(sess.plan, cfg.lr)
+        sess.rate = None  # operator changed: stale decay forecast
+        self._class_degree_cache = None  # degree suggestion may move
+
+    def _shift_rho(self, sess: _Session, rho_new: float,
+                   rho_ub_new: float) -> None:
+        """Ordinary-batch rescale: move the plan's rho anchor without
+        re-probing (no probe matvecs).  Degenerate plans (edgeless
+        admission, rho == 0) re-plan from the fresh bound instead — the
+        ratio tracking would pin rho at 0 forever."""
+        if sess.plan.rho <= 0.0 or not math.isfinite(sess.plan.rho):
+            self._plan_session(sess, rho_new, rho_ub_new)
+            return
+        repl = {"rho": rho_new}
+        if sess.plan.family == "identity":
+            repl["lambda_star"] = plan_mod.identity_lambda_star(rho_new)
+        sess.plan = dataclasses.replace(sess.plan, **repl)
+        sess.rho_ub = rho_ub_new
+        # the wanted-direction scale moved with rho: re-derive the lr
+        # boost (the only other plan-derived session field)
+        sess.lr = program.session_lr(sess.plan, self.cfg.lr)
 
     # ------------------------------------------------------------------
     # admission / eviction
     # ------------------------------------------------------------------
 
     def add_graph(self, sid: str, g, num_clusters: int | None = None,
-                  edge_capacity: int | None = None) -> None:
-        """Admit a graph into its capacity class, cold-initialized."""
+                  edge_capacity: int | None = None,
+                  resume_panel=None) -> None:
+        """Admit a graph into its capacity class.
+
+        ``resume_panel`` warm-starts the session from a previously
+        evicted panel (the ``panel`` entry of :meth:`evict`'s summary):
+        the panel is re-orthonormalized through
+        ``solvers.init_from_panel`` onto the class's node padding, so a
+        re-admitted tenant reconverges in a fraction of the cold ticks.
+        """
         if sid in self._sessions:
             raise ValueError(f"session {sid!r} already exists")
         cfg = self.cfg
@@ -308,30 +381,51 @@ class StreamingService:
                else edge_capacity)
         store = gs.from_edge_list(g, capacity=self._balanced(cap),
                                   num_nodes=node_cap)
-        store, rho, rho_ub, lam_k = self._rho_estimate(store, g.num_nodes)
+        store, rho, rho_ub, lam_k, lam_k1 = self._rho_estimate(
+            store, g.num_nodes)
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
                                  self._admitted)
         self._admitted += 1
+        if resume_panel is not None:
+            rp = jnp.asarray(resume_panel, jnp.float32)
+            if rp.shape != (g.num_nodes, cfg.k):
+                raise ValueError(
+                    f"resume_panel shape {rp.shape} != "
+                    f"({g.num_nodes}, {cfg.k})")
+            v = jnp.zeros((node_cap, cfg.k), jnp.float32).at[
+                : g.num_nodes].set(rp)
+            v = solvers.init_from_panel(v).v
+        else:
+            v = _init_panel(key, node_cap, g.num_nodes, cfg.k)
         sess = _Session(
             sid=sid,
             n=g.num_nodes,
             num_clusters=clusters,
             store=store,
-            v=_init_panel(key, node_cap, g.num_nodes, cfg.k),
-            c=0.0,
-            rho=rho,
+            v=v,
+            plan=plan_mod.plan_dilation(None, k=cfg.k, budget=cfg.degree),
             rho_ub=rho_ub,
-            tau=cfg.dilation_strength,
+            lr=cfg.lr,
+            plan_degree=1,
             tracker=tracking.LabelTracker(clusters),
         )
-        self._set_scale(sess, rho, rho_ub, lam_k)
-        sess.solves = 1  # the admission cold solve
+        self._plan_session(sess, rho, rho_ub, lam_k, lam_k1)
+        sess.solves = 1  # the admission (cold or resumed) solve
         self._sessions[sid] = sess
+        self._class_degree_cache = None  # fleet membership changed
 
     def evict(self, sid: str) -> dict:
-        """Remove a session; returns its summary."""
-        sess = self._sessions.pop(sid)
-        return self._summary(sess)
+        """Remove a session; returns its summary, including the live
+        eigenvector ``panel`` (real rows only) so a later re-admission
+        can warm-start through ``add_graph(resume_panel=...)``."""
+        sess = self._sessions[sid]
+        # summarize BEFORE removal so the reported degree is the one the
+        # session actually solved under (it may anchor its class's max)
+        summary = self._summary(sess)
+        summary["panel"] = np.asarray(sess.v[: sess.n])
+        del self._sessions[sid]
+        self._class_degree_cache = None  # fleet membership changed
+        return summary
 
     def evict_converged(self) -> dict[str, dict]:
         """Drop every converged session (label consumers are done)."""
@@ -371,18 +465,22 @@ class StreamingService:
         store, rho_ub = gs.spectral_radius_upper_bound(store)
         rho_ub_new = float(rho_ub)
         sess.store = store
-        # edge mutation stales the pallas layouts (single and sharded)
+        # edge mutation stales the pallas layouts (single and sharded),
+        # the measured residual-decay rate (operator changed), and —
+        # when the buffer grew a capacity class — the degree map
         sess.blocking = None
         sess.sharded_blocking = None
+        sess.rate = None
+        self._class_degree_cache = None
         if sess.rho_ub > 0.0:
             rho_new = min(rho_ub_new,
-                          sess.rho * rho_ub_new / sess.rho_ub)
+                          sess.plan.rho * rho_ub_new / sess.rho_ub)
         else:
             # degenerate (edgeless) admission: rho == rho_ub == 0, and
             # the ratio would pin rho at 0 forever (c -> 1/eps -> NaN
             # panels); re-anchor on the fresh bound instead
             rho_new = rho_ub_new
-        self._set_scale(sess, rho_new, rho_ub_new)
+        self._shift_rho(sess, rho_new, rho_ub_new)
         if sess.est is not None:
             prev_v = sess.est.v
             est, drift_flag = updates.update_or_flag(
@@ -403,24 +501,24 @@ class StreamingService:
             if res <= 2.0 * cfg.tol:
                 # panel survived: re-anchor the estimate (drift resets)
                 st = sess.store
-                sess.est = _anchor_estimate(st.src, st.dst, st.weight,
-                                            sess.v)
+                sess.est = updates.anchor_estimate_arrays(
+                    st.src, st.dst, st.weight, sess.v)
                 return stats
             # Full SPED re-solve.  The accumulated drift that invalidated
             # the panel also staled the admission-time lambda_max, so
-            # RE-PROBE the spectrum and re-anchor the dilation scale
+            # RE-PROBE the spectrum and re-run the dilation planner
             # before deciding how to seed the solve.  A first-order
             # update outside its validity region can be WORSE than the
             # stale panel, so seed from whichever candidate has the
-            # lower residual under the new (re-probed) operator; go cold
-            # when even that fails the restart test (stream.warm).
+            # lower residual under the new (re-planned) operator; go
+            # cold when even that fails the restart test (stream.warm).
             sess.fallbacks += 1
             sess.est = None
             sess.converged = False
-            st2, rho2, rho_ub2, lam_k2 = self._rho_estimate(
+            st2, rho2, rho_ub2, lam_k2, lam_k12 = self._rho_estimate(
                 sess.store, sess.n)
             sess.store = st2
-            self._set_scale(sess, rho2, rho_ub2, lam_k2)
+            self._plan_session(sess, rho2, rho_ub2, lam_k2, lam_k12)
             res = float(self._residual(sess))  # est.v under re-probed op
             sess.v = prev_v
             res_prev = float(self._residual(sess))
@@ -444,6 +542,35 @@ class StreamingService:
     def _class_key(self, sess: _Session) -> tuple[int, int]:
         return (sess.store.num_nodes, sess.store.capacity)
 
+    def _class_degrees(self) -> dict[tuple, int]:
+        """Per-capacity-class dilation degree: the max over the class's
+        resident exp-family sessions' planned suggestions (snapped onto
+        the planner grid by construction, capped by ``cfg.degree``).
+
+        This IS the per-class degree re-plan: a newly admitted (or
+        drift-re-probed) tenant whose plan needs more dilation raises
+        its class's degree — a new compile key, but only on the snapped
+        degree set (`core.program.schedule_degrees`).  Identity-family
+        sessions stay out: they tick in their own degree-1 groups.
+        Memoized until admission/eviction/re-plan invalidates it.
+        """
+        if self._class_degree_cache is None:
+            degs: dict[tuple, int] = {}
+            for s in self._sessions.values():
+                if s.plan.family == "identity":
+                    continue
+                ck = self._class_key(s)
+                degs[ck] = max(degs.get(ck, 0), s.plan_degree)
+            self._class_degree_cache = degs
+        return self._class_degree_cache
+
+    def _session_degree(self, sess: _Session,
+                        degrees: dict | None = None) -> int:
+        if sess.plan.family == "identity":
+            return 1
+        degrees = self._class_degrees() if degrees is None else degrees
+        return degrees.get(self._class_key(sess), sess.plan_degree)
+
     def _ensure_blocking(self, sess: _Session) -> None:
         """Build (or rebuild after updates) the session's node-blocked
         layout for pallas ticks — host-side, cached on the session.
@@ -457,192 +584,175 @@ class StreamingService:
             sess.blocking = gs.node_blocking(
                 sess.store, block_n=self.cfg.tick_block_n)
 
-    def _group_key(self, sess: _Session) -> tuple:
+    def _group_key(self, sess: _Session, degrees: dict | None = None
+                   ) -> tuple:
         """Sessions sharing a group share one compiled tick program.
 
-        Segment groups by capacity class; pallas additionally groups by
-        the blocking's static layout (block size and pow2-snapped chunk
-        count), since those are the shapes the kernel compiles against —
-        sharded pallas uses the per-shard layout's statics the same way.
-        A converged session whose blocking was invalidated by updates
-        keeps its LAST group key — it won't tick, so no layout rebuild,
-        but it must keep anchoring its old group's occupancy bucket
-        (shrinking buckets would recompile the tick program).
+        Groups by capacity class + scheduled dilation degree; pallas
+        additionally groups by the blocking's static layout (block size
+        and pow2-snapped chunk count), since those are the shapes the
+        kernel compiles against — sharded pallas uses the per-shard
+        layout's statics the same way.  Only ACTIVE (unconverged)
+        sessions are ever grouped, so a converged session's invalidated
+        blocking is never rebuilt just to anchor a bucket.
         """
+        deg = self._session_degree(sess, degrees)
         if self._backend == "pallas":
-            cached = (sess.sharded_blocking if self._mesh is not None
-                      else sess.blocking)
-            if (cached is None and sess.converged
-                    and sess.group_key is not None):
-                return sess.group_key
             self._ensure_blocking(sess)
             b = (sess.sharded_blocking if self._mesh is not None
                  else sess.blocking)
-            key = (self._class_key(sess), b.block_n, b.chunks_per_block,
-                   b.block_e)
+            key = (self._class_key(sess), deg, b.block_n,
+                   b.chunks_per_block, b.block_e)
         else:
-            key = (self._class_key(sess),)
+            key = (self._class_key(sess), deg)
         sess.group_key = key
         return key
 
     def _get_step(self, key: tuple, occupancy: int):
-        from repro.stream import sharded as sharded_mod
-
+        cfg = self.cfg
         fn = self._compiled.get((key, occupancy))
         if fn is None:
-            cfg = self.cfg
-            if self._mesh is not None and self._backend == "pallas":
-                (node_cap, _), block_n, chunks, block_e = key
-                fn = sharded_mod.build_tick_program_pallas(
-                    self._mesh, cfg.edge_axes, cfg.method, cfg.degree,
-                    cfg.steps_per_tick, cfg.lr,
-                    block_n, block_e, chunks, node_cap)
-            elif self._mesh is not None:
-                fn = sharded_mod.build_tick_program_segment(
-                    self._mesh, cfg.edge_axes, cfg.method, cfg.degree,
-                    cfg.steps_per_tick, cfg.lr)
-            elif self._backend == "pallas":
-                _, block_n, chunks, block_e = key
-                fn = self._build_step_pallas(block_n, chunks, block_e)
-            else:
-                fn = self._build_step()
+            # lr is NOT part of the schedule here: tick programs take
+            # the per-session learning rates as a traced input
+            schedule = program.StepSchedule(
+                method=cfg.method, degree=key[1],
+                steps=cfg.steps_per_tick, backend=self._backend)
+            layout = key[2:] if self._backend == "pallas" else None
+            fn = program.build_tick_program(
+                schedule, layout=layout, mesh=self._mesh,
+                edge_axes=cfg.edge_axes)
             self._compiled[(key, occupancy)] = fn
         return fn
 
     @property
     def compile_count(self) -> int:
-        """Distinct compiled tick programs (capacity class × occupancy
-        bucket) — the no-per-session-recompilation invariant's witness."""
+        """Distinct compiled tick programs — (capacity class, degree,
+        layout) x pow2 occupancy bucket, so the count stays logarithmic
+        in fleet size (the schedule-plumbing invariant's witness).  The
+        scheduler's tick multiplier and every per-session hyperparameter
+        are traced: they add NO programs."""
         return len(self._compiled)
 
-    def _build_step(self):
-        cfg = self.cfg
-        step_fn = solvers.STEP_FNS[cfg.method]
+    @property
+    def tick_invocations(self) -> int:
+        """Compiled tick-program invocations so far (all groups)."""
+        return self._tick_invocations
 
-        def one(src, dst, w, v, c):
-            def opv(u):
-                def body(_, x):
-                    return x - c * _edge_mv(src, dst, w, x)
-                return jax.lax.fori_loop(0, cfg.degree, body, u)
+    @property
+    def device_work(self) -> int:
+        """Accumulated device work in session-slot solver steps
+        (occupancy x steps per invocation).  Converged sessions leave
+        their groups, so they contribute ZERO here — the counter the
+        zero-work-when-converged tests assert on."""
+        return self._device_work
 
-            state = solvers.SolverState(v=v, step=jnp.zeros((), jnp.int32))
+    @property
+    def multiplied_ticks(self) -> int:
+        """Invocations the residual-decay scheduler stretched past one
+        plain tick (traced chunk multiplier > 1 — zero extra compiles)."""
+        return self._multiplied_ticks
 
-            def sstep(st, _):
-                return step_fn(st, opv(st.v), cfg.lr), None
+    def _tick_multiplier(self, members: list[_Session]) -> int:
+        """Residual-decay scheduling: the steps multiplier for a group.
 
-            state, _ = jax.lax.scan(
-                sstep, state, None, length=cfg.steps_per_tick)
-            av = opv(state.v)
-            return state.v, metrics.panel_residual(state.v, av)
-
-        return jax.jit(jax.vmap(one))
-
-    def _build_step_pallas(self, block_n: int, chunks: int, block_e: int):
-        """Tick program on the pallas backend: the per-session operator
-        (I - c L)^degree runs the node-blocked incidence-SpMM kernel
-        with the dilation step (alpha=-c, beta=1) fused into its
-        epilogue, and the solver step uses the fused mu-EG kernel.
-
-        Sessions are advanced with ``lax.map`` over the group's stacked
-        blocking arrays — pallas grids don't vmap across the session
-        axis, so the batching win here is per-matvec MXU utilization,
-        not cross-session fusion; the program is still compiled ONCE per
-        (class, blocking layout, occupancy bucket).
+        When every member's forecast (measured decay rate, see
+        ``core.program.contraction_rate``) says the group stays above
+        tolerance for at least ``eval_payoff`` plain ticks, the
+        intermediate residual evaluations have no payoff — run one
+        multiplied tick instead, sized so the SOONEST-converging member
+        is evaluated near its predicted convergence (floored, so nobody
+        overshoots their forecast).  The multiplier is a TRACED chunk
+        count in the compiled program, so any value reuses the group's
+        one program.
         """
         cfg = self.cfg
-        interp = backend_mod.kernel_interpret()
-        step_fn = solvers.make_step_fn(cfg.method, self._backend)
-
-        def one(args):
-            u_local, other, w, deg, v, c = args
-            nb = es_ops.NodeBlocking(
-                u_local=u_local, other=other, weight=w, deg=deg,
-                block_n=block_n, block_e=block_e,
-                chunks_per_block=chunks, num_nodes=v.shape[0])
-
-            def opv(u):
-                def body(_, x):
-                    return es_ops.edge_spmm_blocked(
-                        nb, x, alpha=-c, beta=1.0, interpret=interp)
-                return jax.lax.fori_loop(0, cfg.degree, body, u)
-
-            state = solvers.SolverState(v=v, step=jnp.zeros((), jnp.int32))
-
-            def sstep(st, _):
-                return step_fn(st, opv(st.v), cfg.lr), None
-
-            state, _ = jax.lax.scan(
-                sstep, state, None, length=cfg.steps_per_tick)
-            av = opv(state.v)
-            return state.v, metrics.panel_residual(state.v, av)
-
-        return jax.jit(lambda args: jax.lax.map(one, args))
+        if (cfg.tick_schedule != "residual_decay"
+                or cfg.max_tick_multiplier <= 1):
+            return 1
+        need = None
+        for m in members:
+            if m.rate is None or not (0.0 < m.rate < 1.0):
+                return 1
+            n = program.predicted_steps_to_tol(m.residual, m.rate, cfg.tol)
+            need = n if need is None else min(need, n)
+        if need is None or need <= cfg.eval_payoff * cfg.steps_per_tick:
+            return 1
+        return max(1, min(need // cfg.steps_per_tick,
+                          cfg.max_tick_multiplier))
 
     def tick(self) -> dict[str, float]:
-        """Advance every unconverged session cfg.steps_per_tick solver
-        steps — one compiled program invocation per capacity class (and,
-        on pallas, per blocking layout)."""
+        """Advance every unconverged session one scheduled tick — one
+        compiled program invocation per (capacity class, degree) group
+        (and, on pallas, per blocking layout).  Converged sessions are
+        not grouped at all: zero device work."""
         cfg = self.cfg
+        degrees = self._class_degrees()
         groups: dict[tuple, list[_Session]] = defaultdict(list)
-        totals: dict[tuple, int] = defaultdict(int)
-        for sess in self._sessions.values():
-            # totals count converged sessions too, PER GROUP: a group's
-            # occupancy must not shrink as its members converge, but it
-            # also must not pad to the whole class's total when pallas
-            # splits a class across blocking layouts (_group_key reuses
-            # a converged session's last key rather than rebuilding its
-            # invalidated blocking)
-            totals[self._group_key(sess)] += 1
         for sess in self._sessions.values():
             if not sess.converged:
-                groups[self._group_key(sess)].append(sess)
+                groups[self._group_key(sess, degrees)].append(sess)
         out: dict[str, float] = {}
         for gkey, members in groups.items():
-            # occupancy bucket follows the group's TOTAL session count,
-            # not the active count, so sessions converging one by one
-            # never shrink the bucket (stable shapes => zero recompiles
-            # until the user actually evicts)
-            occ = _next_pow2(totals[gkey])
+            deg = gkey[1]
+            # occupancy bucket follows the ACTIVE member count (pow2
+            # padded with replicas of the first session): converged
+            # sessions no longer ride along as padding, at the cost of
+            # at most log2(max occupancy) compiled buckets per group
+            occ = _next_pow2(len(members))
+            mult = self._tick_multiplier(members)
+            steps = cfg.steps_per_tick * mult
             step = self._get_step(gkey, occ)
             idx = list(range(len(members))) + [0] * (occ - len(members))
             stack = lambda f: jnp.stack([f(members[i]) for i in idx])
-            cs = jnp.asarray([members[i].c for i in idx], jnp.float32)
-            if self._mesh is not None and self._backend == "pallas":
-                from repro.stream import sharded as sharded_mod
-
-                vs, res = step(*sharded_mod.tick_group_arrays_pallas(
-                    [members[i] for i in idx]))
-            elif self._backend == "pallas" and self._mesh is None:
-                vs, res = step((
+            cs = jnp.asarray(
+                [program.dilation_scale(members[i].plan, deg)
+                 for i in idx], jnp.float32)
+            lrs = jnp.asarray([members[i].lr for i in idx], jnp.float32)
+            chunks = jnp.asarray(mult, jnp.int32)  # traced: no recompile
+            if self._backend == "pallas" and self._mesh is not None:
+                vs, res = step(
+                    stack(lambda s: s.sharded_blocking.u_local),
+                    stack(lambda s: s.sharded_blocking.other),
+                    stack(lambda s: s.sharded_blocking.weight),
+                    stack(lambda s: s.sharded_blocking.deg),
+                    stack(lambda s: s.v), cs, lrs, chunks)
+            elif self._backend == "pallas":
+                vs, res = step(
                     stack(lambda s: s.blocking.u_local),
                     stack(lambda s: s.blocking.other),
                     stack(lambda s: s.blocking.weight),
                     stack(lambda s: s.blocking.deg),
-                    stack(lambda s: s.v),
-                    cs,
-                ))
+                    stack(lambda s: s.v), cs, lrs, chunks)
             else:
                 # single-device segment AND sharded segment take the
-                # same stacked-edge-buffer signature (stream.sharded
-                # shards the capacity axis over the mesh)
+                # same stacked-edge-buffer signature (the sharded
+                # builder shards the capacity axis over the mesh)
                 vs, res = step(
                     stack(lambda s: s.store.src),
                     stack(lambda s: s.store.dst),
                     stack(lambda s: s.store.weight),
-                    stack(lambda s: s.v),
-                    cs,
-                )
+                    stack(lambda s: s.v), cs, lrs, chunks)
+            self._tick_invocations += 1
+            self._device_work += occ * steps
+            if mult > 1:
+                self._multiplied_ticks += 1
             res = np.asarray(res)
             for i, sess in enumerate(members):
+                prev = sess.residual
                 sess.v = vs[i]
                 sess.residual = float(res[i])
+                # fresh decay estimate; a non-contracting observation
+                # resets the forecast (the scheduler then stays at
+                # plain ticks until contraction re-establishes)
+                sess.rate = program.contraction_rate(
+                    prev, sess.residual, steps)
                 sess.ticks += 1
                 out[sess.sid] = sess.residual
                 if sess.residual <= cfg.tol:
                     sess.converged = True
                     st = sess.store
-                    sess.est = _anchor_estimate(st.src, st.dst, st.weight,
-                                                sess.v)
+                    sess.est = updates.anchor_estimate_arrays(
+                        st.src, st.dst, st.weight, sess.v)
         return out
 
     @property
@@ -655,6 +765,9 @@ class StreamingService:
         Check `all_converged` afterwards: hitting the tick budget without
         converging also returns (with the budget spent), and serving
         labels from an unconverged panel is the caller's decision.
+        Converged sessions cost zero device work here — their groups
+        shrink away — so waiting on a slow tenant never re-runs the
+        finished ones.
         """
         used = 0
         while not self.all_converged and used < max_ticks:
@@ -668,8 +781,10 @@ class StreamingService:
 
     def _residual(self, sess: _Session) -> float:
         st = sess.store
-        return float(_op_residual(st.src, st.dst, st.weight, sess.v,
-                                  sess.c, self.cfg.degree))
+        deg = self._session_degree(sess)
+        c = program.dilation_scale(sess.plan, deg)
+        return float(operators.dilated_panel_residual(
+            st.src, st.dst, st.weight, sess.v, c, deg))
 
     def live_edges(self, sid: str) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(src, dst, weight) of the session's live edges — the public
@@ -695,8 +810,7 @@ class StreamingService:
     def session_info(self, sid: str) -> dict:
         return self._summary(self._sessions[sid])
 
-    @staticmethod
-    def _summary(sess: _Session) -> dict:
+    def _summary(self, sess: _Session) -> dict:
         return {
             "n": sess.n,
             "node_capacity": sess.store.num_nodes,
@@ -707,6 +821,10 @@ class StreamingService:
             "rho": sess.rho,
             "rho_ub": sess.rho_ub,
             "tau": sess.tau,
+            "family": sess.plan.family,
+            "degree": self._session_degree(sess),
+            "lr": sess.lr,
+            "rate": sess.rate,
             "ticks": sess.ticks,
             "solves": sess.solves,
             "incremental_updates": sess.incremental_updates,

@@ -1,15 +1,13 @@
 """Sharded serving: mesh-parallel capacity-class ticks.
 
-``ServiceConfig(mesh=...)`` routes every capacity-class tick through ONE
-shard_mapped fused series program (built here, compiled once per
-(capacity class, blocking layout, occupancy bucket) exactly like the
-single-device tick programs): the group's stacked edge buffers (segment
-backend) or stacked per-shard node blockings (pallas backend) are
-partitioned over the mesh's edge axes, each dilation matvec runs the
-per-shard kernel and then ONE psum of the whole group's stacked
-(G, n, k) panels — the paper's "polynomial matvecs distribute
-trivially" claim, made concrete — and the solver step plus the panel
-residual run replicated on the psum'd panels.
+``ServiceConfig(mesh=...)`` routes every session-group tick through ONE
+shard_mapped program compiled once per (capacity class, degree, blocking
+layout, occupancy bucket, steps multiplier) exactly like the
+single-device tick programs.  The tick programs themselves live in
+:mod:`repro.core.program` (``build_tick_sharded_segment`` /
+``build_tick_sharded_pallas``) — the same unified solve loop as the
+one-shot and single-device paths; this module keeps the mesh POLICY the
+streaming store must uphold:
 
 Decomposition contract (see ``kernels.edge_spmm.ops
 .ShardedNodeBlocking``): shard ``s`` computes ``deg_s * v - A_s v``
@@ -27,18 +25,11 @@ the segment recurrence ordering).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import shard_map
-from repro.core import backend as backend_mod
-from repro.core import laplacian as lap
-from repro.core import metrics, solvers
 from repro.core.distributed import num_edge_shards
-from repro.kernels.edge_spmm import ops as es_ops
+from repro.core.program import (  # noqa: F401  (re-exported tick builders)
+    build_tick_sharded_pallas,
+    build_tick_sharded_segment,
+)
 
 
 def balanced_capacity(capacity: int, num_shards: int) -> int:
@@ -52,125 +43,9 @@ def balanced_capacity(capacity: int, num_shards: int) -> int:
     return capacity + (-capacity) % max(num_shards, 1)
 
 
-def build_tick_program_segment(mesh, edge_axes, method: str, degree: int,
-                               steps_per_tick: int, lr: float):
-    """Sharded segment tick: fn(src, dst, w, vs, cs) -> (vs', residuals).
-
-    Inputs are the group's stacked (G, cap) edge buffers — sharded over
-    ``edge_axes`` along the capacity axis — and replicated (G, n, k)
-    panels / (G,) dilation scales.  The per-shard gather/scatter matvec
-    is vmapped over sessions, so each dilation step costs ONE psum of
-    the stacked (G, n, k) panels for the whole group.
-    """
-    step_fn = solvers.STEP_FNS[method]
-    spec_e = P(None, edge_axes)  # (G, cap): shard the capacity axis
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(spec_e, spec_e, spec_e, P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False)  # scan carries mix varying/unvarying values
-    def tick(src, dst, w, vs, cs):
-        local_mv = jax.vmap(lap.edge_matvec_arrays)
-
-        def opv(us):  # (G, n, k) -> (G, n, k), one psum per dilation step
-            def body(_, xs):
-                lxs = jax.lax.psum(local_mv(src, dst, w, xs), edge_axes)
-                return xs - cs[:, None, None] * lxs
-            return jax.lax.fori_loop(0, degree, body, us)
-
-        state = solvers.SolverState(
-            v=vs, step=jnp.zeros((vs.shape[0],), jnp.int32))
-
-        def sstep(st, _):
-            avs = opv(st.v)
-            return jax.vmap(step_fn, in_axes=(0, 0, None))(st, avs, lr), None
-
-        state, _ = jax.lax.scan(sstep, state, None, length=steps_per_tick)
-        avs = opv(state.v)
-        return state.v, jax.vmap(metrics.panel_residual)(state.v, avs)
-
-    return jax.jit(tick)
-
-
-def build_tick_program_pallas(mesh, edge_axes, method: str, degree: int,
-                              steps_per_tick: int, lr: float,
-                              block_n: int, block_e: int, chunks: int,
-                              num_nodes: int):
-    """Sharded pallas tick: per-shard NODE-BLOCKED kernels + one psum.
-
-    fn(u_local, other, w, deg, vs, cs) -> (vs', residuals), where the
-    blocking arrays are the group's stacked per-shard layouts of shape
-    (G, S, NB*C*BE) — sharded over ``edge_axes`` along the shard axis —
-    and deg is (G, S, NB*block_n) PER-SHARD degrees.  Pallas grids don't
-    vmap across the session axis, so the kernel (and the fused mu-EG
-    step) advance sessions under ``lax.map``; every device runs the same
-    map length, so the per-matvec psum stays collective-matched.  Panels
-    of any n tick this way — the sharded path scales past
-    ``ONE_HOT_NODE_LIMIT`` with only (block_n, k) slices in VMEM.
-    """
-    interp = backend_mod.kernel_interpret()
-    step_fn = solvers.make_step_fn(method, "pallas")
-    static = dict(block_n=block_n, block_e=block_e,
-                  chunks_per_block=chunks, num_nodes=num_nodes)
-    spec_b = P(None, edge_axes)  # (G, S, L): shard the shard axis
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(spec_b, spec_b, spec_b, spec_b, P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False)  # pallas_call has no replication rule
-    def tick(u_local, other, w, deg, vs, cs):
-        def local_mv(xs):  # (G, n, k) -> per-shard (deg_s*x - A_s x)
-            def one(args):
-                ul, ot, wt, dg, x = args
-                local = es_ops.shard_local_blocking(ul, ot, wt, dg,
-                                                    **static)
-                return es_ops.edge_spmm_blocked(local, x, interpret=interp)
-            return jax.lax.map(one, (u_local, other, w, deg, xs))
-
-        def opv(us):
-            def body(_, xs):
-                lxs = jax.lax.psum(local_mv(xs), edge_axes)
-                return xs - cs[:, None, None] * lxs
-            return jax.lax.fori_loop(0, degree, body, us)
-
-        state = solvers.SolverState(
-            v=vs, step=jnp.zeros((vs.shape[0],), jnp.int32))
-
-        def sstep(st, _):
-            avs = opv(st.v)
-            new = jax.lax.map(
-                lambda args: step_fn(
-                    solvers.SolverState(v=args[0], step=args[1]),
-                    args[2], lr),
-                (st.v, st.step, avs))
-            return new, None
-
-        state, _ = jax.lax.scan(sstep, state, None, length=steps_per_tick)
-        avs = opv(state.v)
-        return state.v, jax.vmap(metrics.panel_residual)(state.v, avs)
-
-    return jax.jit(tick)
-
-
-def tick_group_arrays_pallas(sessions):
-    """Stack a tick group's per-session sharded blockings + panels into
-    the (G, S, ...) inputs of :func:`build_tick_program_pallas`."""
-    return (
-        jnp.stack([s.sharded_blocking.u_local for s in sessions]),
-        jnp.stack([s.sharded_blocking.other for s in sessions]),
-        jnp.stack([s.sharded_blocking.weight for s in sessions]),
-        jnp.stack([s.sharded_blocking.deg for s in sessions]),
-        jnp.stack([s.v for s in sessions]),
-        jnp.asarray([s.c for s in sessions], jnp.float32),
-    )
-
-
 __all__ = [
     "balanced_capacity",
-    "build_tick_program_pallas",
-    "build_tick_program_segment",
+    "build_tick_sharded_pallas",
+    "build_tick_sharded_segment",
     "num_edge_shards",
-    "tick_group_arrays_pallas",
 ]

@@ -53,6 +53,15 @@ def estimate_from_panel(matvec: MatVec, v: jax.Array) -> EigenEstimate:
     return EigenEstimate(lam=lam, v=v, drift=jnp.zeros((), v.dtype))
 
 
+@jax.jit
+def anchor_estimate_arrays(src: jax.Array, dst: jax.Array, w: jax.Array,
+                           v: jax.Array) -> EigenEstimate:
+    """Anchor an estimate on a padded edge buffer: ``lambda = diag(V^T L
+    V)`` with drift reset (was ``stream.service._anchor_estimate``)."""
+    return estimate_from_panel(
+        lambda x: edge_matvec_arrays(src, dst, w, x), v)
+
+
 def delta_matvec(src: jax.Array, dst: jax.Array, dw: jax.Array,
                  v: jax.Array) -> jax.Array:
     """ΔL @ v for an edge batch with realized weight deltas dw, O(B k)."""

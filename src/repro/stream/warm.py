@@ -24,7 +24,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import metrics, solvers
+from repro.core import metrics, program, solvers
 
 MatVec = Callable[[jax.Array], jax.Array]
 
@@ -78,10 +78,8 @@ def _chunk_runner(op: MatVec, method: str, chunk: int, lr: float):
 
     @jax.jit
     def run(st: solvers.SolverState):
-        def body(s, _):
-            return step_fn(s, op(s.v), lr), None
-        st, _ = jax.lax.scan(body, st, None, length=chunk)
-        return st, metrics.panel_residual(st.v, op(st.v))
+        # the unified solve loop (core.program) — one chunk + residual
+        return program.run_chunk(op, step_fn, st, lr, chunk)
 
     try:
         if cache is None:

@@ -296,6 +296,22 @@ def test_sharded_full_solve_equivalence(mesh):
         assert err <= TOL, (name, err)
 
 
+def test_distributed_solve_routes_through_unified_program(mesh):
+    """core.distributed.distributed_solve == run_solver over the local
+    operator: the distributed layer's whole-series solve runs THE same
+    step construction (core.program) as every other deployment shape."""
+    g = CASES["weighted"]()
+    rho = float(lap.spectral_radius_upper_bound(g))
+    s = limit_neg_exp(7, scale=1.2 / rho)
+    cfg = solvers.SolverConfig(method="mu_eg", lr=0.3, steps=10,
+                               eval_every=5, k=4, seed=0)
+    st_d, _ = distributed.distributed_solve(mesh, g, s, cfg,
+                                            backend="segment")
+    op_l = operators.edge_series_operator(g, s, backend="segment")
+    st_l, _ = run_solver(op_l, g.num_nodes, cfg)
+    assert float(jnp.max(jnp.abs(st_d.v - st_l.v))) <= TOL
+
+
 @pytest.mark.distributed
 def test_sharded_probe_matches_single_device(mesh):
     """Sharded SLQ == single-device SLQ (same keys, psum'd matvec)."""

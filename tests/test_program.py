@@ -1,0 +1,394 @@
+"""The unified SolveProgram layer (repro.core.program) and the adaptive
+scheduling built on it.
+
+Pins the refactor's contracts:
+  * the deduped operator helpers (core.operators / core.metrics /
+    stream.updates) are EXACTLY the closures stream.service used to
+    hand-roll;
+  * run_solver is a thin wrapper over program.run_program;
+  * per-session lr / dilation-scale scheduling is traced — the
+    (class, degree, layout, occupancy, multiplier) compile-cache key
+    space stays on snapped/pow2 grids (the PR 4 logarithmic guarantee);
+  * converged sessions cost ZERO device work per tick;
+  * evicted tenants re-admit through panel caching and reconverge in
+    fewer ticks;
+  * the residual-decay tick scheduler reaches fleet convergence in
+    fewer program invocations than round-robin at equal quality.
+"""
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graphs, metrics, operators, program, solvers
+from repro.core import laplacian as lap
+from repro.core.series import limit_neg_exp
+from repro.stream import updates
+from repro.stream.service import ServiceConfig, StreamingService
+
+
+def _rand_graph(seed: int, n: int, e: int) -> lap.EdgeList:
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.integers(0, n, e)], axis=1)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    w = rng.uniform(0.1, 2.0, size=len(edges)).astype(np.float32)
+    return lap.make_edge_list(edges, n, weights=w)
+
+
+def _panel(seed: int, n: int, k: int) -> jax.Array:
+    v = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(n, k)), jnp.float32)
+    q, _ = jnp.linalg.qr(v)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# deduped helpers == the service's old private closures (satellite 1)
+# ---------------------------------------------------------------------------
+
+_edge_mv = lap.edge_matvec_arrays
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _legacy_op_apply(src, dst, w, v, c, degree):
+    """Verbatim copy of the old stream.service._op_apply closure."""
+    def body(_, u):
+        return u - c * _edge_mv(src, dst, w, u)
+    return jax.lax.fori_loop(0, degree, body, v)
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def _legacy_op_residual(src, dst, w, v, c, degree):
+    av = _legacy_op_apply(src, dst, w, v, c, degree)
+    return metrics.panel_residual(v, av)
+
+
+@jax.jit
+def _legacy_anchor_estimate(src, dst, w, v):
+    return updates.estimate_from_panel(
+        lambda x: _edge_mv(src, dst, w, x), v)
+
+
+def test_dilated_matvec_matches_legacy_closure():
+    g = _rand_graph(0, 50, 180)
+    v = _panel(1, 50, 4)
+    for degree in (1, 7):
+        want = _legacy_op_apply(g.src, g.dst, g.weight, v, 0.03, degree)
+        got = operators.dilated_matvec_arrays(
+            g.src, g.dst, g.weight, v, 0.03, degree)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dilated_residual_matches_legacy_closure():
+    g = _rand_graph(2, 50, 180)
+    v = _panel(3, 50, 4)
+    want = _legacy_op_residual(g.src, g.dst, g.weight, v, 0.02, 7)
+    got = operators.dilated_panel_residual(
+        g.src, g.dst, g.weight, v, 0.02, 7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_anchor_estimate_matches_legacy_closure():
+    g = _rand_graph(4, 50, 180)
+    v = _panel(5, 50, 4)
+    want = _legacy_anchor_estimate(g.src, g.dst, g.weight, v)
+    got = updates.anchor_estimate_arrays(g.src, g.dst, g.weight, v)
+    np.testing.assert_array_equal(np.asarray(got.lam), np.asarray(want.lam))
+    np.testing.assert_array_equal(np.asarray(got.v), np.asarray(want.v))
+    assert float(got.drift) == float(want.drift) == 0.0
+
+
+def test_operator_residual_is_panel_residual_of_application():
+    g = _rand_graph(6, 40, 120)
+    v = _panel(7, 40, 3)
+    mv = operators.edge_matvec(g)
+    np.testing.assert_array_equal(
+        np.asarray(metrics.operator_residual(mv, v)),
+        np.asarray(metrics.panel_residual(v, mv(v))))
+
+
+# ---------------------------------------------------------------------------
+# run_solver is a thin wrapper over the unified loop
+# ---------------------------------------------------------------------------
+
+def test_run_solver_routes_through_run_program():
+    g = _rand_graph(8, 60, 200)
+    rho = float(lap.spectral_radius_upper_bound(g))
+    s = limit_neg_exp(7, scale=1.0 / rho)
+    op = operators.edge_series_operator(g, s)
+    cfg = solvers.SolverConfig(method="mu_eg", lr=0.3, steps=20,
+                               eval_every=10, k=4, seed=3)
+    st_a, tr_a = solvers.run_solver(op, g.num_nodes, cfg)
+    st_b, tr_b = program.run_program(op, g.num_nodes, cfg)
+    np.testing.assert_array_equal(np.asarray(st_a.v), np.asarray(st_b.v))
+    np.testing.assert_array_equal(np.asarray(tr_a.subspace_error),
+                                  np.asarray(tr_b.subspace_error))
+
+
+def test_tick_segment_matches_per_session_chunks():
+    """One batched tick program == per-session run_chunk loops, with
+    DIFFERENT per-session dilation scales and learning rates (the
+    traced inputs one compiled program serves)."""
+    gs_ = [_rand_graph(10 + i, 40, 150) for i in range(3)]
+    cap = max(g.num_edges for g in gs_)
+    gs_ = [lap.pad_edge_list(g, cap) for g in gs_]
+    vs = jnp.stack([_panel(20 + i, 40, 4) for i in range(3)])
+    cs = jnp.asarray([0.01, 0.02, 0.04], jnp.float32)
+    lrs = jnp.asarray([0.1, 0.3, 0.5], jnp.float32)
+    sched = program.StepSchedule(method="mu_eg", degree=5, steps=3)
+    fn = program.build_tick_program(sched)
+    # chunks=2: the traced multiplier runs 2 x 3 steps in one program
+    out_v, out_r = fn(
+        jnp.stack([g.src for g in gs_]),
+        jnp.stack([g.dst for g in gs_]),
+        jnp.stack([g.weight for g in gs_]),
+        vs, cs, lrs, jnp.asarray(2, jnp.int32))
+    step_fn = solvers.STEP_FNS["mu_eg"]
+    for i, g in enumerate(gs_):
+        opv = operators.dilated_operator_arrays(
+            g.src, g.dst, g.weight, cs[i], 5)
+        st = solvers.SolverState(v=vs[i], step=jnp.zeros((), jnp.int32))
+        st, res = jax.jit(
+            lambda s: program.run_chunk(opv, step_fn, s, lrs[i], 6))(st)
+        assert float(jnp.max(jnp.abs(out_v[i] - st.v))) <= 1e-5
+        assert abs(float(out_r[i]) - float(res)) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_schedule_from_plan_identity_and_exp():
+    from repro.spectral.plan import plan_dilation
+
+    # wide probed gap -> identity family -> degree-1 unit-scale program
+    ident = plan_dilation(None, k=4, budget=15, rho_fallback=10.0,
+                          lam_k=0.0, lam_k1=8.0)
+    assert ident.family == "identity"
+    s = program.StepSchedule.from_plan(ident, steps=10, base_lr=0.4)
+    assert s.degree == 1
+    assert s.lr == pytest.approx(0.4)  # unit-normalized program form
+    c = program.dilation_scale(ident, s.degree)
+    assert c == pytest.approx(1.0 / ident.lambda_star)
+    # narrow gap -> limit series at the planner degree
+    dil = plan_dilation(None, k=4, budget=15, rho_fallback=10.0,
+                        lam_k=1.0, lam_k1=1.2)
+    assert dil.family == "limit_neg_exp"
+    s2 = program.StepSchedule.from_plan(dil, steps=10, base_lr=0.4)
+    assert s2.degree == dil.degree and s2.degree % 2 == 1
+    assert program.dilation_scale(dil, s2.degree) == pytest.approx(
+        dil.tau / (dil.rho * s2.degree))
+
+
+def test_session_lr_varies_with_plan():
+    """The per-session lr is genuinely plan-driven: tenants whose
+    wanted spread the dilation decayed hardest take larger (capped)
+    steps; tenants with the spread intact keep the base lr."""
+    from repro.spectral.plan import plan_dilation
+
+    mild = plan_dilation(None, k=4, budget=15, rho_fallback=10.0,
+                         lam_k=0.05, lam_k1=0.2)
+    strong = plan_dilation(None, k=4, budget=15, rho_fallback=10.0,
+                           lam_k=2.0, lam_k1=2.3)
+    lr_mild = program.session_lr(mild, 0.3)
+    lr_strong = program.session_lr(strong, 0.3)
+    assert lr_strong > lr_mild >= 0.3
+    assert lr_strong <= 0.3 * program.LR_BOOST_CAP
+    assert 0.0 < program.wanted_scale(strong) < program.wanted_scale(mild)
+
+
+def test_schedule_degrees_snapped_and_bounded():
+    degs = program.schedule_degrees(15)
+    assert degs[0] == 1 and all(d % 2 == 1 for d in degs)
+    assert degs == tuple(sorted(set(degs)))
+    assert max(degs) <= 15
+    assert len(program.schedule_degrees(101)) <= 8  # planner grid size
+
+
+def test_contraction_forecasts():
+    rate = program.contraction_rate(0.4, 0.1, 20)
+    assert rate is not None and 0 < rate < 1
+    assert program.predicted_residual(0.1, rate, 20) == pytest.approx(
+        0.1 * (0.1 / 0.4))
+    n = program.predicted_steps_to_tol(0.1, rate, 1e-3)
+    assert 0 < n < 10_000
+    assert program.predicted_steps_to_tol(1e-4, rate, 1e-3) == 0
+    # degenerate observations carry no signal
+    assert program.contraction_rate(0.1, 0.4, 20) is None  # not decaying
+    assert program.contraction_rate(float("inf"), 0.1, 20) is None
+    assert program.predicted_steps_to_tol(0.1, None, 1e-3) >= 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# schedule plumbing: compile-cache key space (satellite: invariant test)
+# ---------------------------------------------------------------------------
+
+SVC = ServiceConfig(k=4, num_clusters=3, degree=7, steps_per_tick=10,
+                    lr=0.3, tol=5e-3, dilation_strength=6.0)
+
+
+def test_per_session_schedules_do_not_grow_compile_cache():
+    """Sessions with DIFFERENT per-session lr, dilation scale, and rho
+    share one compiled program: the compile-cache key space is exactly
+    (class, degree, layout) x pow2 occupancy x pow2 multiplier — the
+    PR 4 logarithmic guarantee, now with the adaptive layer on top."""
+    svc = StreamingService(SVC)
+    for i in range(5):
+        # different weights/densities -> different probed rho, scale, lr
+        g = _rand_graph(30 + i, 48, 140 + 17 * i)
+        svc.add_graph(f"s{i}", g, num_clusters=3, edge_capacity=512)
+    scales = {round(s.plan.scale, 6) for s in svc._sessions.values()}
+    assert len(scales) > 1  # genuinely distinct traced inputs
+    svc.tick()
+    svc.tick()
+    group_keys = {key for key, _ in svc._compiled}
+    # every session landed in a (class, degree) group whose degree is on
+    # the snapped planner grid
+    allowed = set(program.schedule_degrees(SVC.degree))
+    assert {key[1] for key in group_keys} <= allowed
+    # two plain ticks at constant occupancy: one program per group
+    assert svc.compile_count == len(group_keys)
+    svc.run_until_converged(max_ticks=200)
+    # the scheduler's multipliers are traced chunk counts: however many
+    # multiplied ticks ran, the compiled set only grew along the pow2
+    # occupancy ladder (<= 1 + log2(max occupancy) buckets per group)
+    occ_budget = 1 + int(math.log2(8))  # 5 sessions pad to <= 8
+    assert svc.compile_count <= len(group_keys) * occ_budget
+    for key, occ in svc._compiled:
+        assert occ == 1 << (occ.bit_length() - 1)
+
+
+# ---------------------------------------------------------------------------
+# converged sessions cost zero device work (satellite: small fix)
+# ---------------------------------------------------------------------------
+
+def test_converged_sessions_cost_zero_device_work():
+    svc = StreamingService(SVC)
+    for i in range(2):
+        g, _ = graphs.sbm_graph(50, 3, p_in=0.4, p_out=0.02, seed=i)
+        svc.add_graph(f"g{i}", g, num_clusters=3, edge_capacity=512)
+    svc.tick()
+    base_work = svc.device_work
+    base_inv = svc.tick_invocations
+    assert base_work >= 2 * SVC.steps_per_tick  # both sessions ticked
+    # one session converges -> its slot leaves the group entirely
+    svc._sessions["g0"].converged = True
+    svc.tick()
+    delta = svc.device_work - base_work
+    # occupancy 1, multiplier 1 (g1's first tick left no decay-rate
+    # forecast yet): exactly one session-slot of steps, not two
+    assert delta == svc.cfg.steps_per_tick
+    # all converged -> a tick runs NO programs at all
+    svc._sessions["g1"].converged = True
+    work, inv = svc.device_work, svc.tick_invocations
+    assert svc.tick() == {}
+    assert svc.device_work == work
+    assert svc.tick_invocations == inv
+
+
+# ---------------------------------------------------------------------------
+# panel caching across evict / re-admit (satellite)
+# ---------------------------------------------------------------------------
+
+def test_evicted_panel_warm_starts_readmission():
+    svc = StreamingService(SVC)
+    g, _ = graphs.sbm_graph(60, 3, p_in=0.4, p_out=0.02, seed=7)
+    svc.add_graph("t", g, num_clusters=3, edge_capacity=1024)
+    svc.run_until_converged(max_ticks=100)
+    cold_ticks = svc.session_info("t")["ticks"]
+    assert cold_ticks >= 2  # the comparison below is meaningful
+    summary = svc.evict("t")
+    panel = summary["panel"]
+    assert panel.shape == (g.num_nodes, SVC.k)
+    assert "t" not in svc._sessions
+    # re-admit the tenant with its cached panel: reconverges in a
+    # fraction of the cold admission's ticks
+    svc.add_graph("t", g, num_clusters=3, edge_capacity=1024,
+                  resume_panel=panel)
+    svc.run_until_converged(max_ticks=100)
+    info = svc.session_info("t")
+    assert info["converged"]
+    assert info["ticks"] < cold_ticks
+    # node-padding invariant survives the resume path
+    v = np.asarray(svc._sessions["t"].v)
+    np.testing.assert_array_equal(v[g.num_nodes:], 0.0)
+
+
+def test_resume_panel_shape_validated():
+    svc = StreamingService(SVC)
+    g, _ = graphs.sbm_graph(40, 2, p_in=0.4, p_out=0.02, seed=0)
+    with pytest.raises(ValueError, match="resume_panel"):
+        svc.add_graph("bad", g, num_clusters=3,
+                      resume_panel=np.zeros((10, SVC.k), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# residual-decay tick scheduler vs round-robin
+# ---------------------------------------------------------------------------
+
+def _mixed_fleet(svc: StreamingService):
+    for i in range(2):  # fast-converging: well separated communities
+        g, _ = graphs.sbm_graph(60, 3, p_in=0.45, p_out=0.01, seed=i)
+        svc.add_graph(f"fast{i}", g, num_clusters=3, edge_capacity=1024)
+    for i in range(2):  # slow-converging: weak structure
+        g, _ = graphs.sbm_graph(60, 3, p_in=0.16, p_out=0.06, seed=10 + i)
+        svc.add_graph(f"slow{i}", g, num_clusters=3, edge_capacity=1024)
+
+
+def test_residual_decay_scheduler_beats_round_robin():
+    cfg = dataclasses.replace(SVC, steps_per_tick=10, tol=2e-3)
+    rr = StreamingService(
+        dataclasses.replace(cfg, tick_schedule="round_robin"))
+    sched = StreamingService(cfg)
+    _mixed_fleet(rr)
+    _mixed_fleet(sched)
+    rr.run_until_converged(max_ticks=400)
+    sched.run_until_converged(max_ticks=400)
+    assert rr.all_converged and sched.all_converged
+    # fewer compiled-program invocations (and their residual evals /
+    # host syncs) to fleet convergence on the mixed-rate fleet
+    assert sched.tick_invocations < rr.tick_invocations
+    # no per-tenant quality regression: everyone at tolerance
+    for sid in ("fast0", "fast1", "slow0", "slow1"):
+        assert sched.session_info(sid)["residual"] <= cfg.tol
+    # the scheduler actually stretched ticks — through TRACED chunk
+    # counts, so its compiled-program set is no larger than round-robin's
+    assert sched.multiplied_ticks > 0
+    assert rr.multiplied_ticks == 0
+    assert sched.compile_count <= rr.compile_count + 1
+
+
+# ---------------------------------------------------------------------------
+# bench --check (satellite: CI tooling)
+# ---------------------------------------------------------------------------
+
+def test_bench_regressions_diff():
+    import os
+    import sys
+
+    # benchmarks/ is a repo-root package (normally imported via
+    # `python -m benchmarks.run` from the root); make the test
+    # cwd-independent
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.common import bench_regressions
+
+    old = {"rows": [{"name": "a", "us_per_call": 100.0, "derived": ""},
+                    {"name": "b", "us_per_call": 50.0, "derived": ""}],
+           "iter_speedup_warm_vs_cold": 7.5}
+    ok = {"rows": [{"name": "a", "us_per_call": 110.0, "derived": ""},
+                   {"name": "b", "us_per_call": 60.0, "derived": ""},
+                   {"name": "new_row", "us_per_call": 9e9, "derived": ""}],
+          "iter_speedup_warm_vs_cold": 7.0}
+    assert bench_regressions(old, ok) == []
+    bad = {"rows": [{"name": "a", "us_per_call": 200.0, "derived": ""}],
+           "iter_speedup_warm_vs_cold": 2.0}
+    msgs = bench_regressions(old, bad)
+    assert len(msgs) == 2
+    assert any("a:" in m for m in msgs)
+    assert any("iter_speedup" in m for m in msgs)
