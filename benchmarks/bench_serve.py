@@ -1,0 +1,277 @@
+"""Serving-layer benchmarks: many-tenant ingest throughput with the
+double-buffered async pipeline vs the serialized baseline, and
+per-request-type latency percentiles under a synthetic load generator.
+
+The headline claim: with many tenants pushing edge batches while the
+engine ticks, the double-buffered pipeline — pushes merge into a host
+staging buffer and return immediately, one engine thread drains the
+swapped buffer between device ticks — sustains higher update throughput
+to the SAME residual target than the serialized baseline, where every
+push waits its turn for the engine lock behind running ticks
+(``ingest_overlap_speedup`` in BENCH_serve.json, wall-clock to fleet
+convergence with every batch applied).
+
+Latency rows come from the server's own geometric-bucket histograms
+(repro.serve.metrics): p50/p99 per request type (admit / push / labels
+/ summary / evict) under interleaved query threads.
+
+``python -m benchmarks.bench_serve --http-smoke`` is the CI stage that
+boots ``python -m repro.serve`` as a real subprocess, runs a short HTTP
+load against it, asserts a sane p99 and a clean SIGTERM shutdown.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.core import graphs
+
+TENANTS = 6
+N_NODES = 120
+ROUNDS = 12  # edge-batch pushes per tenant
+BATCH_EDGES = 8
+QUERY_THREADS = 2
+QUERIES_PER_THREAD = 40
+
+
+def _service_cfg():
+    from repro.stream.service import ServiceConfig
+
+    return ServiceConfig(k=6, num_clusters=4, degree=9, steps_per_tick=10,
+                         lr=0.3, tol=5e-3, dilation_strength=6.0, seed=0)
+
+
+def _tenant_graph(i: int):
+    g, _ = graphs.sbm_graph(N_NODES, 4, p_in=0.3, p_out=0.02, seed=100 + i)
+    edges = np.stack([np.asarray(g.src), np.asarray(g.dst)], axis=1)
+    return edges, np.asarray(g.weight)
+
+
+def _tenant_batches(i: int):
+    """ROUNDS small intra-community reweight batches per tenant —
+    the steady-state streaming workload.  Per-batch deltas stay small
+    (2*sum|dw| well under the drift bound) so the serialized baseline's
+    individual applies ride the cheap first-order path: the comparison
+    measures ingest/tick OVERLAP, not a fallback-resolve storm."""
+    rng = np.random.default_rng(1000 + i)
+    out = []
+    for _ in range(ROUNDS):
+        blk = rng.integers(4) * (N_NODES // 4)
+        e = np.stack([rng.integers(blk, blk + N_NODES // 4, BATCH_EDGES),
+                      rng.integers(blk, blk + N_NODES // 4, BATCH_EDGES)],
+                     axis=1)
+        e = e[e[:, 0] != e[:, 1]]
+        out.append((e, np.full(len(e), 0.01, np.float32)))
+    return out
+
+
+def _drive(pipeline: str, queries: bool):
+    """Steady-state many-tenant load: admit TENANTS sessions and run
+    them to convergence UNTIMED (tick-program compiles for every pow2
+    occupancy bucket happen here, identically for both pipelines), then
+    time the streaming phase — every tenant's thread pushes its edge
+    batches while the engine re-converges the fleet — until all batches
+    are applied and every session is back at the SAME residual target.
+    Returns (server, ingest_wall_s, total_updates)."""
+    from repro.serve import Server, ServerConfig
+
+    srv = Server(ServerConfig(service=_service_cfg(), pipeline=pipeline,
+                              idle_sleep_s=0.001))
+    sids = [f"t{i}" for i in range(TENANTS)]
+    batches = {sid: _tenant_batches(i) for i, sid in enumerate(sids)}
+    srv.start()
+    for i, sid in enumerate(sids):
+        edges, w = _tenant_graph(i)
+        srv.admit(sid, edges, N_NODES, weights=w, num_clusters=4,
+                  edge_capacity=2048)
+    assert srv.wait_converged(timeout=600.0), "warmup failed to converge"
+
+    def pusher(sid):
+        for e, w in batches[sid]:
+            srv.push(sid, e, w, mode="add")
+
+    def querier(t):
+        rng = np.random.default_rng(2000 + t)
+        for _ in range(QUERIES_PER_THREAD):
+            sid = sids[rng.integers(TENANTS)]
+            srv.summary(sid)
+            srv.labels(sid)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=pusher, args=(sid,)) for sid in sids]
+    if queries:
+        threads += [threading.Thread(target=querier, args=(t,))
+                    for t in range(QUERY_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert srv.flush(timeout=300.0), "pipeline failed to drain"
+    assert srv.wait_converged(timeout=300.0), "fleet failed to converge"
+    wall = time.perf_counter() - t0
+    total = sum(len(e) for bs in batches.values() for e, _ in bs)
+    assert srv.metrics.counter("dropped_batches") == 0
+    return srv, wall, total
+
+
+def run():
+    rows = []
+    # -- A/B: serialized baseline vs double-buffered pipeline ----------
+    srv_ser, wall_ser, updates = _drive("serialized", queries=False)
+    srv_ser.stop()
+    srv_db, wall_db, _ = _drive("double_buffer", queries=False)
+    srv_db.stop()
+    ups_ser = updates / wall_ser
+    ups_db = updates / wall_db
+    speedup = wall_ser / wall_db
+    rows.append(("serve/ingest_serialized", wall_ser / updates * 1e6,
+                 f"{ups_ser:.0f} updates/s to tol"))
+    rows.append(("serve/ingest_double_buffer", wall_db / updates * 1e6,
+                 f"{ups_db:.0f} updates/s to tol"))
+    rows.append(("serve/ingest_overlap", 0.0,
+                 f"{speedup:.2f}x serialized/double_buffer wall"))
+
+    # -- request-latency percentiles under interleaved load ------------
+    # us_per_call is 0.0 ON PURPOSE: tail latencies under a loaded
+    # engine are dominated by one-time XLA-compilation stalls and
+    # runner oversubscription, orders-of-magnitude unstable run to run,
+    # so they are reported (derived text + extra["latency"]) but NOT
+    # fed to the --check regression gate (which skips rows whose
+    # committed us_per_call <= 0).  The gated metrics of this bench are
+    # the throughput rows above and ingest_overlap_speedup.
+    srv, _, _ = _drive("double_buffer", queries=True)
+    for sid in list(srv.service.session_ids()):
+        srv.evict(sid)
+    srv.stop()
+    snap = srv.stats()
+    latency = snap["latency"]
+    for op in ("admit", "push", "labels", "summary", "evict"):
+        s = latency[op]
+        for q in ("p50", "p99"):
+            rows.append((f"serve/{op}_{q}", 0.0,
+                         f"{s[f'{q}_s'] * 1e6:.0f}us n={s['count']} "
+                         f"mean={s['mean_s'] * 1e6:.0f}us"))
+
+    write_bench_json("serve", rows, extra={
+        "ingest_overlap_speedup": speedup,
+        "serialized_updates_per_s": ups_ser,
+        "double_buffer_updates_per_s": ups_db,
+        "tenants": TENANTS,
+        "updates": updates,
+        "latency": latency,
+        "counters": snap["counters"],
+        "tick_utilization": snap["gauges"].get("tick_utilization", 0.0),
+    })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# --http-smoke: boot the real process, load it over HTTP, kill it cleanly
+# ---------------------------------------------------------------------------
+
+def http_smoke(p99_budget_s: float = 3.0) -> int:
+    import json
+    import os
+    import signal
+    import subprocess
+    import sys
+    import urllib.request
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    existing = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + existing if existing else "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve", "--num-clusters", "3",
+         "--k", "4", "--degree", "7", "--steps-per-tick", "10"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+    try:
+        banner = proc.stdout.readline().strip()
+        if not banner.startswith("SERVING "):
+            print(f"FAIL: bad banner {banner!r}", file=sys.stderr)
+            print(proc.stderr.read(), file=sys.stderr)
+            return 1
+        port = dict(kv.split("=") for kv in banner.split()[1:])["port"]
+        base = f"http://127.0.0.1:{port}"
+
+        def req(path, method="GET", body=None):
+            data = json.dumps(body).encode() if body is not None else None
+            r = urllib.request.Request(
+                base + path, data=data, method=method,
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(r, timeout=30) as resp:
+                return json.loads(resp.read())
+
+        g, _ = graphs.sbm_graph(60, 3, p_in=0.4, p_out=0.02, seed=0)
+        edges = np.stack([np.asarray(g.src), np.asarray(g.dst)], 1).tolist()
+        req("/v1/sessions/smoke", "POST",
+            {"edges": edges, "num_nodes": 60, "num_clusters": 3,
+             "weights": np.asarray(g.weight).tolist()})
+        # warm before measuring: wait out the initial convergence (tick
+        # programs + probes compile here) and run one labels query (the
+        # k-means labeller compiles there) so the gate scores the
+        # serving steady state, not one-time jax compilation; with
+        # >= 101 samples per type, p99's rank also sits below any
+        # single residual straggler
+        deadline = time.monotonic() + 120.0
+        while time.monotonic() < deadline:
+            if req("/v1/sessions/smoke").get("converged"):
+                break
+            time.sleep(0.1)
+        else:
+            print("FAIL: smoke session never converged", file=sys.stderr)
+            return 1
+        req("/v1/sessions/smoke/labels")
+        rng = np.random.default_rng(0)
+        for _ in range(110):
+            i, j = rng.integers(0, 60, 2)
+            if i != j:
+                req("/v1/sessions/smoke/edges", "POST",
+                    {"edges": [[int(i), int(j)]], "weights": [0.05],
+                     "mode": "add"})
+            req("/v1/sessions/smoke/labels")
+            req("/v1/sessions/smoke")
+        metrics = req("/metrics")
+        # admit is excluded from the SLO gate: the first request of a
+        # cold process pays one-time jax compilation (probes + tick
+        # programs), which is provisioning cost, not query latency
+        worst = max(
+            s["p99_s"] for op, s in metrics["latency"].items()
+            if s["count"] and op != "admit")
+        print(f"http-smoke: worst non-admit p99 {worst * 1e3:.1f}ms over "
+              f"{sum(s['count'] for s in metrics['latency'].values())} "
+              f"requests")
+        if worst > p99_budget_s:
+            print(f"FAIL: p99 {worst:.3f}s > budget {p99_budget_s}s",
+                  file=sys.stderr)
+            return 1
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=60)
+        if proc.returncode != 0:
+            print(f"FAIL: exit code {proc.returncode}\n{err}",
+                  file=sys.stderr)
+            return 1
+        print("http-smoke: clean SIGTERM shutdown (exit 0)")
+        return 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--http-smoke", action="store_true",
+                    help="subprocess + HTTP load + clean-shutdown gate")
+    args = ap.parse_args()
+    if args.http_smoke:
+        sys.exit(http_smoke())
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

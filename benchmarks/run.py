@@ -65,12 +65,13 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_baselines, bench_cliques, bench_distributed,
                             bench_kernels, bench_linkpred, bench_mdp,
-                            bench_series_degree, bench_spectral, bench_stream,
-                            bench_transforms, bench_walks)
+                            bench_serve, bench_series_degree, bench_spectral,
+                            bench_stream, bench_transforms, bench_walks)
     from benchmarks.common import bench_regressions
     mods = [
         ("spectral", bench_spectral),
         ("stream", bench_stream),
+        ("serve", bench_serve),
         ("distributed", bench_distributed),
         ("table2", bench_transforms),
         ("fig2_3", bench_mdp),

@@ -21,15 +21,21 @@ python -m pytest -q -m "pallas and not slow"
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python -m pytest -q -m "distributed and not slow"
 python -m pytest -q -m "not slow and not stochastic and not pallas and not distributed" "$@"
-# Perf-trajectory gate (NON-BLOCKING): re-run the streaming bench and
-# diff its freshly written BENCH_stream.json key metrics against the
-# committed file; >25% regressions are surfaced but do not fail CI —
-# wall-clock noise on shared runners is real, a red tier-1 is not.
+# Serving smoke (BLOCKING): boot `python -m repro.serve` as a real
+# subprocess, drive a short HTTP load through admit/push/labels/summary,
+# assert a sane p99 and a clean SIGTERM shutdown — the process-level
+# contract no in-process test exercises.
+python -m benchmarks.bench_serve --http-smoke
+# Perf-trajectory gate (NON-BLOCKING): re-run the streaming + serving
+# benches and diff their freshly written BENCH_*.json key metrics
+# against the committed files; >25% regressions are surfaced but do not
+# fail CI — wall-clock noise on shared runners is real, a red tier-1 is
+# not.
 # run.py exits 2 for a metric regression, 1 for a crashed bench module:
 # word the (still non-blocking) warning accordingly so a broken bench
 # is not mistaken for wall-clock noise.
 bench_status=0
-python -m benchmarks.run --check --only stream || bench_status=$?
+python -m benchmarks.run --check --only stream,serve || bench_status=$?
 if [ "$bench_status" -eq 2 ]; then
     echo "[ci] WARNING: bench --check reported a >25% perf regression (non-blocking)"
 elif [ "$bench_status" -ne 0 ]; then

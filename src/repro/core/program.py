@@ -279,24 +279,36 @@ def _group_loop(opv_all, step_all, vs, lrs, steps: int, chunks):
     ``step_all`` maps the solver step over the group axis (vmap on
     segment, ``lax.map`` on pallas — its grids don't vmap).
 
-    ``chunks`` is the residual-decay scheduler's tick MULTIPLIER: the
-    program runs ``chunks * steps`` solver steps before its single
-    residual evaluation.  It is a TRACED scalar (the static scan of
-    ``steps`` steps repeats under a ``fori_loop`` with a traced bound),
-    so scheduled multi-chunk ticks reuse the exact compiled program of
-    a plain tick — the adaptive layer costs zero recompilation.
+    ``chunks`` is the residual-decay scheduler's tick MULTIPLIER: a
+    traced scalar runs ``chunks * steps`` solver steps for every member
+    before the single residual evaluation, and a traced PER-SESSION
+    ``(G,)`` vector gives each member its own chunk budget — session i
+    steps for ``chunks[i] * steps`` steps and then FREEZES (its panel
+    stops moving under a mask) while slower group peers keep iterating
+    up to ``max(chunks)``, so one member forecast to converge soon no
+    longer caps the whole group's cadence at multiplier 1.  Either way
+    the value is TRACED (the static scan of ``steps`` steps repeats
+    under a ``fori_loop`` with a traced bound, the freeze is a
+    ``where``), so scheduled multi-chunk ticks reuse the exact compiled
+    program of a plain tick — the adaptive layer costs zero
+    recompilation.
     """
     state = solvers.SolverState(
         v=vs, step=jnp.zeros((vs.shape[0],), jnp.int32))
+    chunks = jnp.asarray(chunks, jnp.int32)
+    per_session = jnp.broadcast_to(chunks, (vs.shape[0],))
 
     def body(st, _):
         return step_all(st, opv_all(st.v), lrs), None
 
-    def chunk_body(_, st):
-        st, _ = jax.lax.scan(body, st, None, length=steps)
-        return st
+    def chunk_body(i, st):
+        stepped, _ = jax.lax.scan(body, st, None, length=steps)
+        live = i < per_session  # (G,) — members past their budget freeze
+        return solvers.SolverState(
+            v=jnp.where(live[:, None, None], stepped.v, st.v),
+            step=jnp.where(live, stepped.step, st.step))
 
-    state = jax.lax.fori_loop(0, chunks, chunk_body, state)
+    state = jax.lax.fori_loop(0, jnp.max(per_session), chunk_body, state)
     avs = opv_all(state.v)
     return state.v, jax.vmap(metrics.panel_residual)(state.v, avs)
 
@@ -480,8 +492,9 @@ def build_tick_program(schedule: StepSchedule, *, layout=None, mesh=None,
     switches to the shard_mapped variants.  The streaming service keys
     the returned program by its (capacity class, degree, layout,
     occupancy bucket, schedule statics); the per-session lr/scale AND
-    the scheduler's tick multiplier are traced inputs — the whole
-    adaptive layer moves underneath one compiled program.
+    the scheduler's tick multipliers (scalar or per-session ``(G,)``
+    chunk budgets — see :func:`_group_loop`) are traced inputs — the
+    whole adaptive layer moves underneath one compiled program.
     """
     if mesh is not None and layout is not None:
         return build_tick_sharded_pallas(schedule, mesh, edge_axes, *layout)

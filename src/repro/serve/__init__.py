@@ -1,0 +1,26 @@
+"""Request-level serving layer over the streaming engine.
+
+- server.py  — ``Server``: admit/push/labels/summary/evict API with the
+  double-buffered async ingest/tick pipeline (and the ``serialized``
+  A/B baseline).
+- results.py — ``VersionedResults``: monotonic result versions, stable
+  cluster ids, lazy label materialization; reads never touch the engine.
+- metrics.py — ``ServeMetrics``: per-request latency histograms
+  (p50/p99), pipeline counters, gauges.
+- http.py    — ``ServeHTTP``: stdlib JSON-over-HTTP front end
+  (``UnknownSessionError`` -> 404, ``ValueError`` -> 400).
+- __main__.py — ``python -m repro.serve`` process shell with clean
+  SIGTERM shutdown.
+"""
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.results import ResultVersion, VersionedResults
+from repro.serve.server import Server, ServerConfig
+
+__all__ = [
+    "LatencyHistogram",
+    "ResultVersion",
+    "ServeMetrics",
+    "Server",
+    "ServerConfig",
+    "VersionedResults",
+]

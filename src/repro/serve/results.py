@@ -1,0 +1,162 @@
+"""Versioned results store: queries never touch the solve engine.
+
+The serving layer's reads (``labels`` / ``summary``) are decoupled from
+the engine by committing an immutable :class:`ResultVersion` per session
+at well-defined commit points (admission, after staged updates apply,
+after every tick that moved a session).  Queries are served from the
+LAST COMMITTED version:
+
+* **monotonic version ids** — per-session versions only ever increase
+  (and a global commit counter orders commits across sessions), so a
+  client polling ``labels`` can reason about freshness: a response
+  carries the version its labels were solved under, and two responses
+  with the same version are byte-identical;
+* **stable cluster ids** — the store owns one
+  :class:`~repro.stream.tracking.LabelTracker` per session, fed in
+  commit order, so the ids a CLIENT sees are stable across re-solves /
+  k-means reruns regardless of how the engine permutes its internal
+  labels; per-commit :func:`~repro.stream.tracking.label_churn` is the
+  measured guarantee (0.0 between consecutive queries unless the
+  communities actually moved);
+* **lazy labels** — committing is cheap (a summary dict + a reference
+  to the immutable panel array); the k-means labelling of a version is
+  materialized on FIRST query and cached on the version, under a
+  per-session lock so concurrent queries do not race the tracker.
+
+Eviction keeps the session's FINAL version queryable by default
+(``drop_evicted=False`` is the server's choice) — a client that raced
+an eviction still gets its 404 from the committed-tombstone state
+rather than a half-removed map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.stream import tracking
+from repro.stream.service import UnknownSessionError
+
+
+@dataclasses.dataclass
+class ResultVersion:
+    """One committed solve state of one session (immutable once built;
+    ``labels``/``churn`` materialize lazily under the session lock)."""
+
+    version: int  # per-session, monotonically increasing from 1
+    commit_seq: int  # global commit order across sessions
+    summary: dict  # engine session_info at commit time (+ "version")
+    panel: object  # (n, k) embedding panel the labels solve from
+    labels: np.ndarray | None = None  # stable ids, lazily materialized
+    churn: float | None = None  # label_churn vs the previous labelling
+
+
+class _SessionResults:
+    __slots__ = ("lock", "tracker", "latest", "evicted")
+
+    def __init__(self, num_clusters: int):
+        self.lock = threading.Lock()
+        self.tracker = tracking.LabelTracker(num_clusters)
+        self.latest: ResultVersion | None = None
+        self.evicted = False
+
+
+class VersionedResults:
+    """Map of session id -> committed result versions (latest wins)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._sessions: dict[str, _SessionResults] = {}
+        self._commit_seq = 0
+
+    # -- writes (engine/tick thread) -----------------------------------
+
+    def register(self, sid: str, num_clusters: int) -> None:
+        with self._lock:
+            if sid in self._sessions and not self._sessions[sid].evicted:
+                raise ValueError(f"session {sid!r} already registered")
+            self._sessions[sid] = _SessionResults(num_clusters)
+
+    def commit(self, sid: str, summary: dict, panel) -> int:
+        """Commit a new version for ``sid``; returns the version id."""
+        with self._lock:
+            sr = self._sessions.get(sid)
+            if sr is None or sr.evicted:
+                raise UnknownSessionError(sid)
+            self._commit_seq += 1
+            seq = self._commit_seq
+        with sr.lock:
+            version = 1 if sr.latest is None else sr.latest.version + 1
+            summary = dict(summary)
+            summary["version"] = version
+            sr.latest = ResultVersion(
+                version=version, commit_seq=seq, summary=summary,
+                panel=panel)
+            return version
+
+    def evict(self, sid: str, drop: bool = False) -> None:
+        """Tombstone (default) or fully drop a session's results."""
+        with self._lock:
+            sr = self._sessions.get(sid)
+            if sr is None or sr.evicted:
+                raise UnknownSessionError(sid)
+            if drop:
+                del self._sessions[sid]
+            else:
+                sr.evicted = True
+
+    # -- reads (query threads) -----------------------------------------
+
+    def _live(self, sid: str) -> _SessionResults:
+        with self._lock:
+            sr = self._sessions.get(sid)
+        if sr is None or sr.evicted or sr.latest is None:
+            raise UnknownSessionError(sid)
+        return sr
+
+    def has(self, sid: str) -> bool:
+        with self._lock:
+            sr = self._sessions.get(sid)
+            return sr is not None and not sr.evicted
+
+    def version(self, sid: str) -> int:
+        return self._live(sid).latest.version
+
+    def summary(self, sid: str) -> dict:
+        """The last committed summary (carries its ``version``)."""
+        sr = self._live(sid)
+        with sr.lock:
+            return dict(sr.latest.summary)
+
+    def labels(self, sid: str, labeler) -> tuple[np.ndarray, int, float]:
+        """(stable labels, version, churn) of the last committed version.
+
+        ``labeler(panel) -> raw labels`` runs at most once per version
+        (cached); the raw labelling feeds the store's tracker so served
+        ids stay stable across versions.  ``churn`` is the fraction of
+        nodes whose stable id moved since the previously LABELLED
+        version (0.0 for the first).
+        """
+        sr = self._live(sid)
+        with sr.lock:
+            rv = sr.latest
+            if rv.labels is None:
+                prev = sr.tracker.ref
+                stable = np.asarray(sr.tracker.update(labeler(rv.panel)))
+                rv.labels = stable
+                rv.churn = (tracking.label_churn(np.asarray(prev), stable)
+                            if prev is not None else 0.0)
+            return rv.labels.copy(), rv.version, rv.churn
+
+    def stats(self) -> dict:
+        with self._lock:
+            live = [s for s in self._sessions.values() if not s.evicted]
+            return {
+                "sessions": len(live),
+                "evicted": len(self._sessions) - len(live),
+                "commits": self._commit_seq,
+            }
+
+
+__all__ = ["ResultVersion", "VersionedResults"]

@@ -28,7 +28,8 @@ service
     probe-driven DilationPlans (per-session lr/scale traced, per-class
     degree re-planned on the snapped planner grid), batched jitted
     ticks built by repro.core.program (one compiled program per
-    (class, degree, layout, occupancy, multiplier)), the residual-decay
+    (class, degree, layout, occupancy); the scheduler's per-session
+    step multipliers ride as a traced input), the residual-decay
     tick scheduler, per-session convergence via panel residuals
     (converged sessions cost zero device work), eviction with panel
     caching (``add_graph(resume_panel=)`` re-admission), streaming
@@ -66,9 +67,14 @@ from repro.stream.graph_store import (  # noqa: F401
 from repro.stream.service import (  # noqa: F401
     ServiceConfig,
     StreamingService,
+    UnknownSessionError,
     node_capacity_class,
 )
-from repro.stream.tracking import LabelTracker, match_labels  # noqa: F401
+from repro.stream.tracking import (  # noqa: F401
+    LabelTracker,
+    label_churn,
+    match_labels,
+)
 from repro.stream.updates import (  # noqa: F401
     EigenEstimate,
     UpdateConfig,

@@ -38,14 +38,19 @@ solver, the warm reconvergence path, and the distributed solves:
   * The RESIDUAL-DECAY TICK SCHEDULER (``tick_schedule=
     "residual_decay"``, the default): each session's measured residual
     decay rate forecasts its remaining solver steps
-    (core.program.predicted_steps_to_tol).  A group predicted to stay
+    (core.program.predicted_steps_to_tol).  A session predicted to stay
     far above tolerance after an ordinary tick skips the intermediate
-    residual evaluations by running one MULTIPLIED tick — the
-    multiplier is a TRACED chunk count inside the compiled program, so
-    scheduling adds ZERO compiles — fewer program invocations, fewer
-    eval operator applications, and fewer host round-trips to fleet
-    convergence, with identical solver math.
-    ``tick_schedule="round_robin"`` restores fixed-size ticks.
+    residual evaluations by riding a MULTIPLIED tick — the multipliers
+    are TRACED per-session chunk budgets inside the compiled program
+    (members past their own budget freeze under a mask while slower
+    peers keep stepping), so scheduling adds ZERO compiles — fewer
+    program invocations, fewer eval operator applications, and fewer
+    host round-trips to fleet convergence, with identical solver math.
+    Because a frozen slot still executes device steps, a group mixing
+    plain and stretched members sub-batches into two invocations of
+    the same compiled programs when that costs fewer slot-steps
+    (``_split_by_multiplier``).  ``tick_schedule="round_robin"``
+    restores fixed-size ticks.
 
 Node padding invariant: panels keep EXACT zeros on rows >= the session's
 real node count.  No edge ever touches a padding node, and every solver
@@ -86,6 +91,58 @@ _TICK_FAMILIES = ("identity", "limit_neg_exp")
 def node_capacity_class(num_nodes: int) -> int:
     """Node-count capacity class (power of two >= num_nodes)."""
     return max(_next_pow2(num_nodes), 64)
+
+
+def _split_by_multiplier(members: list, mults: np.ndarray) -> list:
+    """Sub-batch a tick group so short-budget members don't ride a
+    long invocation.  The shared program's device cost is occupancy x
+    the LARGEST member budget — short-budget members freeze under the
+    per-session chunk mask (``core.program``) but their slots still
+    step — so batching a plain (multiplier-1) member with a stretched
+    one executes the stretched member's whole budget in the plain
+    member's slot for nothing.  Members bucket by pow2 of their
+    multiplier (within-bucket waste stays under 2x), then adjacent
+    buckets greedily re-merge whenever pow2 occupancy padding makes
+    the joint invocation no dearer in slot-steps (e.g. 1 plain + 7
+    stretched pads to occupancy 8 either way).  Sub-batches reuse the
+    same compiled programs at smaller occupancy buckets; singleton and
+    uniform-multiplier groups never split."""
+    buckets: dict[int, list[int]] = {}
+    for i, m in enumerate(mults):
+        buckets.setdefault((int(m) - 1).bit_length(), []).append(i)
+    if len(buckets) == 1:
+        return [(members, mults)]
+    subs = [idx for _, idx in sorted(buckets.items())]
+    merged = [subs[0]]
+    for idx in subs[1:]:
+        prev = merged[-1]
+        cost_split = (_next_pow2(len(prev)) * int(mults[prev].max())
+                      + _next_pow2(len(idx)) * int(mults[idx].max()))
+        cost_joint = (_next_pow2(len(prev) + len(idx))
+                      * int(mults[idx].max()))
+        if cost_joint <= cost_split:
+            merged[-1] = prev + idx
+        else:
+            merged.append(idx)
+    return [([members[i] for i in s], mults[s]) for s in merged]
+
+
+class UnknownSessionError(KeyError):
+    """An operation referenced a session id that was never admitted or
+    was already evicted.
+
+    Subclasses ``KeyError`` for backward compatibility with callers that
+    guarded the old raw-dict lookups; the serving layer
+    (:mod:`repro.serve`) relies on the typed class to map these to 404
+    responses instead of a generic 500.
+    """
+
+    def __init__(self, sid: str):
+        super().__init__(sid)
+        self.sid = sid
+
+    def __str__(self) -> str:  # KeyError.__str__ repr-quotes the arg
+        return f"unknown or evicted session {self.sid!r}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,15 +191,24 @@ class ServiceConfig:
     mesh: object | None = None
     edge_axes: tuple = ("data",)
     # Residual-decay tick scheduling: "residual_decay" forecasts each
-    # group's remaining solver steps from measured residual decay and
-    # multiplies the tick's step count (a TRACED chunk count — any
-    # multiplier reuses the group's one compiled program) when every
-    # member is predicted to stay above `eval_payoff * steps_per_tick`
-    # steps from tolerance — the intermediate residual evals would have
-    # no payoff.  "round_robin" = fixed-size ticks for every group.
+    # SESSION's remaining solver steps from its measured residual decay
+    # and gives it its own chunk budget (a TRACED per-session count —
+    # any mix reuses the group's one compiled program) when it is
+    # predicted to stay above `eval_payoff * steps_per_tick` steps from
+    # tolerance — the intermediate residual evals would have no payoff.
+    # Members past their budget freeze inside the shared program, so a
+    # soon-converging member no longer caps its group's cadence.
+    # "round_robin" = fixed-size ticks for every group.
     tick_schedule: str = "residual_decay"
     max_tick_multiplier: int = 8  # cap on the scheduled multiplier
     eval_payoff: float = 2.0  # multiply only past this many plain ticks
+    # Sessions within this factor of tol cap their multiplier at a
+    # gentle 2: the measured decay rate plateaus against the residual
+    # floor near convergence (rate -> 1), so forecasts there are
+    # unreliable in both directions — a full-forecast stretch executes
+    # hundreds of steps for a session one short hop from tolerance,
+    # while plain ticks grind out an invocation per hop.
+    stretch_residual_floor: float = 4.0
 
     def __post_init__(self):
         if self.degree % 2 == 0:
@@ -196,6 +262,24 @@ class _Session:
         return self.plan.tau
 
 
+def panel_labels(panel, num_clusters: int, *, drop_trivial: bool = True,
+                 seed: int = 0, kmeans_restarts: int = 8) -> np.ndarray:
+    """Raw k-means labelling of an (n, k) embedding panel — the
+    tracker-free labelling primitive shared by :meth:`StreamingService
+    .labels` (which feeds it through the session tracker) and the serve
+    layer's versioned results store (which runs its own tracker in
+    commit order so served ids stay stable)."""
+    panel = jnp.asarray(panel)
+    start = 1 if drop_trivial else 0
+    emb = panel[:, start: start + num_clusters]
+    norms = jnp.linalg.norm(emb, axis=1, keepdims=True)
+    emb = emb / jnp.maximum(norms, 1e-12)
+    res = km.kmeans(
+        jax.random.PRNGKey(seed + 2), emb, num_clusters,
+        restarts=kmeans_restarts)
+    return np.asarray(res.labels)
+
+
 @functools.partial(jax.jit, static_argnames=("node_cap", "n", "k"))
 def _init_panel(key, node_cap: int, n: int, k: int):
     """Random orthonormal panel supported on the first n rows."""
@@ -232,6 +316,18 @@ class StreamingService:
         # eviction / re-plans, so status sweeps (session_info per
         # tenant) must not rebuild the map per session — O(S^2) fleets
         self._class_degree_cache: dict[tuple, int] | None = None
+
+    def _get(self, sid: str) -> _Session:
+        try:
+            return self._sessions[sid]
+        except KeyError:
+            raise UnknownSessionError(sid) from None
+
+    def has_session(self, sid: str) -> bool:
+        return sid in self._sessions
+
+    def session_ids(self) -> list[str]:
+        return list(self._sessions)
 
     def _balanced(self, capacity: int) -> int:
         """Edge capacity rounded up to a shard-balanced size."""
@@ -417,8 +513,12 @@ class StreamingService:
     def evict(self, sid: str) -> dict:
         """Remove a session; returns its summary, including the live
         eigenvector ``panel`` (real rows only) so a later re-admission
-        can warm-start through ``add_graph(resume_panel=...)``."""
-        sess = self._sessions[sid]
+        can warm-start through ``add_graph(resume_panel=...)``.
+
+        Raises :class:`UnknownSessionError` on an unknown or
+        already-evicted sid (evict is not idempotent: the second call
+        reports the id as gone instead of silently succeeding)."""
+        sess = self._get(sid)
         # summarize BEFORE removal so the reported degree is the one the
         # session actually solved under (it may anchor its class's max)
         summary = self._summary(sess)
@@ -441,7 +541,7 @@ class StreamingService:
         """Apply an edge batch; converged sessions take the first-order
         eigen-update path, falling back to a warm re-solve on drift."""
         cfg = self.cfg
-        sess = self._sessions[sid]
+        sess = self._get(sid)
         pad = max(_next_pow2(len(np.atleast_1d(weights))),
                   cfg.min_batch_pad)
         batch = gs.coalesce_batch(edges, weights, mode=mode, pad_to=pad)
@@ -490,6 +590,24 @@ class StreamingService:
             sess.incremental_updates += 1
             if not drift_flag:
                 sess.est = est  # cheap path: drift bound still safe
+                # The drift bound guards first-order VALIDITY, not the
+                # residual target: a converged session absorbing real
+                # weight deltas can sit well above tolerance while the
+                # bound stays "safe" (large eigengap => large drift
+                # budget), and because converged sessions left their
+                # tick groups entirely, it would NEVER be re-solved —
+                # every later batch silently staged against a stale
+                # panel.  Verify with one operator application and
+                # re-enter the tick rotation when the panel misses
+                # tolerance; a genuinely realized no-op (dw == 0, e.g.
+                # a reweight to the current value) skips the check and
+                # keeps convergence verbatim.
+                if sess.converged and bool(np.any(np.asarray(dw) != 0.0)):
+                    res = float(self._residual(sess))
+                    sess.residual = res
+                    if res > cfg.tol:
+                        sess.converged = False
+                        sess.est = None  # ticking owns the panel again
                 return stats
             # The drift bound is conservative (Σ 2|dw| vs the min
             # PANEL gap, which bulk eigenvalues make tiny) — so before
@@ -652,39 +770,51 @@ class StreamingService:
         plain tick (traced chunk multiplier > 1 — zero extra compiles)."""
         return self._multiplied_ticks
 
-    def _tick_multiplier(self, members: list[_Session]) -> int:
-        """Residual-decay scheduling: the steps multiplier for a group.
+    def _tick_multipliers(self, members: list[_Session]) -> np.ndarray:
+        """Residual-decay scheduling: PER-SESSION steps multipliers.
 
-        When every member's forecast (measured decay rate, see
-        ``core.program.contraction_rate``) says the group stays above
-        tolerance for at least ``eval_payoff`` plain ticks, the
-        intermediate residual evaluations have no payoff — run one
-        multiplied tick instead, sized so the SOONEST-converging member
-        is evaluated near its predicted convergence (floored, so nobody
-        overshoots their forecast).  The multiplier is a TRACED chunk
-        count in the compiled program, so any value reuses the group's
-        one program.
+        Each member's own forecast (measured decay rate, see
+        ``core.program.contraction_rate``) sizes its own chunk budget:
+        a member predicted to stay above tolerance for more than
+        ``eval_payoff`` plain ticks stretches to ``min(predicted plain
+        ticks, max_tick_multiplier)`` — floored, so nobody overshoots
+        their forecast — while a member near convergence (or with no
+        usable forecast yet) keeps multiplier 1 and freezes after its
+        own budget inside the shared program (``core.program``'s
+        per-session chunk mask).  Before this split the group took ONE
+        multiplier ``min``-ed over members, so the soonest-converging
+        (or merely forecast-less) session capped every peer at plain
+        ticks.  The multipliers ride as a traced ``(G,)`` input, so any
+        mix reuses the group's one compiled program; ``tick`` then
+        sub-batches plain members away from stretched ones when that
+        executes fewer slot-steps (``_split_by_multiplier``).
         """
         cfg = self.cfg
+        mults = np.ones(len(members), np.int64)
         if (cfg.tick_schedule != "residual_decay"
                 or cfg.max_tick_multiplier <= 1):
-            return 1
-        need = None
-        for m in members:
+            return mults
+        for i, m in enumerate(members):
             if m.rate is None or not (0.0 < m.rate < 1.0):
-                return 1
-            n = program.predicted_steps_to_tol(m.residual, m.rate, cfg.tol)
-            need = n if need is None else min(need, n)
-        if need is None or need <= cfg.eval_payoff * cfg.steps_per_tick:
-            return 1
-        return max(1, min(need // cfg.steps_per_tick,
-                          cfg.max_tick_multiplier))
+                continue
+            need = program.predicted_steps_to_tol(m.residual, m.rate,
+                                                  cfg.tol)
+            if need <= cfg.eval_payoff * cfg.steps_per_tick:
+                continue
+            mult = max(1, min(need // cfg.steps_per_tick,
+                              cfg.max_tick_multiplier))
+            if m.residual <= cfg.stretch_residual_floor * cfg.tol:
+                mult = min(mult, 4)  # endgame cap (see config)
+            mults[i] = mult
+        return mults
 
     def tick(self) -> dict[str, float]:
         """Advance every unconverged session one scheduled tick — one
         compiled program invocation per (capacity class, degree) group
-        (and, on pallas, per blocking layout).  Converged sessions are
-        not grouped at all: zero device work."""
+        (and, on pallas, per blocking layout), or two when the
+        scheduler sub-batches plain members away from stretched ones
+        (``_split_by_multiplier``).  Converged sessions are not grouped
+        at all: zero device work."""
         cfg = self.cfg
         degrees = self._class_degrees()
         groups: dict[tuple, list[_Session]] = defaultdict(list)
@@ -692,67 +822,75 @@ class StreamingService:
             if not sess.converged:
                 groups[self._group_key(sess, degrees)].append(sess)
         out: dict[str, float] = {}
-        for gkey, members in groups.items():
+        for gkey, g_members in groups.items():
             deg = gkey[1]
-            # occupancy bucket follows the ACTIVE member count (pow2
-            # padded with replicas of the first session): converged
-            # sessions no longer ride along as padding, at the cost of
-            # at most log2(max occupancy) compiled buckets per group
-            occ = _next_pow2(len(members))
-            mult = self._tick_multiplier(members)
-            steps = cfg.steps_per_tick * mult
-            step = self._get_step(gkey, occ)
-            idx = list(range(len(members))) + [0] * (occ - len(members))
-            stack = lambda f: jnp.stack([f(members[i]) for i in idx])
-            cs = jnp.asarray(
-                [program.dilation_scale(members[i].plan, deg)
-                 for i in idx], jnp.float32)
-            lrs = jnp.asarray([members[i].lr for i in idx], jnp.float32)
-            chunks = jnp.asarray(mult, jnp.int32)  # traced: no recompile
-            if self._backend == "pallas" and self._mesh is not None:
-                vs, res = step(
-                    stack(lambda s: s.sharded_blocking.u_local),
-                    stack(lambda s: s.sharded_blocking.other),
-                    stack(lambda s: s.sharded_blocking.weight),
-                    stack(lambda s: s.sharded_blocking.deg),
-                    stack(lambda s: s.v), cs, lrs, chunks)
-            elif self._backend == "pallas":
-                vs, res = step(
-                    stack(lambda s: s.blocking.u_local),
-                    stack(lambda s: s.blocking.other),
-                    stack(lambda s: s.blocking.weight),
-                    stack(lambda s: s.blocking.deg),
-                    stack(lambda s: s.v), cs, lrs, chunks)
-            else:
-                # single-device segment AND sharded segment take the
-                # same stacked-edge-buffer signature (the sharded
-                # builder shards the capacity axis over the mesh)
-                vs, res = step(
-                    stack(lambda s: s.store.src),
-                    stack(lambda s: s.store.dst),
-                    stack(lambda s: s.store.weight),
-                    stack(lambda s: s.v), cs, lrs, chunks)
-            self._tick_invocations += 1
-            self._device_work += occ * steps
-            if mult > 1:
-                self._multiplied_ticks += 1
-            res = np.asarray(res)
-            for i, sess in enumerate(members):
-                prev = sess.residual
-                sess.v = vs[i]
-                sess.residual = float(res[i])
-                # fresh decay estimate; a non-contracting observation
-                # resets the forecast (the scheduler then stays at
-                # plain ticks until contraction re-establishes)
-                sess.rate = program.contraction_rate(
-                    prev, sess.residual, steps)
-                sess.ticks += 1
-                out[sess.sid] = sess.residual
-                if sess.residual <= cfg.tol:
-                    sess.converged = True
-                    st = sess.store
-                    sess.est = updates.anchor_estimate_arrays(
-                        st.src, st.dst, st.weight, sess.v)
+            g_mults = self._tick_multipliers(g_members)
+            for members, mults in _split_by_multiplier(g_members, g_mults):
+                # occupancy bucket follows the ACTIVE member count (pow2
+                # padded with replicas of the first session): converged
+                # sessions no longer ride along as padding, at the cost of
+                # at most log2(max occupancy) compiled buckets per group
+                occ = _next_pow2(len(members))
+                max_mult = int(mults.max())
+                step = self._get_step(gkey, occ)
+                idx = list(range(len(members))) + [0] * (occ - len(members))
+                stack = lambda f: jnp.stack([f(members[i]) for i in idx])
+                cs = jnp.asarray(
+                    [program.dilation_scale(members[i].plan, deg)
+                     for i in idx], jnp.float32)
+                lrs = jnp.asarray([members[i].lr for i in idx], jnp.float32)
+                # traced per-session chunk budgets: no recompile for any mix
+                chunks = jnp.asarray(mults[np.asarray(idx)], jnp.int32)
+                if self._backend == "pallas" and self._mesh is not None:
+                    vs, res = step(
+                        stack(lambda s: s.sharded_blocking.u_local),
+                        stack(lambda s: s.sharded_blocking.other),
+                        stack(lambda s: s.sharded_blocking.weight),
+                        stack(lambda s: s.sharded_blocking.deg),
+                        stack(lambda s: s.v), cs, lrs, chunks)
+                elif self._backend == "pallas":
+                    vs, res = step(
+                        stack(lambda s: s.blocking.u_local),
+                        stack(lambda s: s.blocking.other),
+                        stack(lambda s: s.blocking.weight),
+                        stack(lambda s: s.blocking.deg),
+                        stack(lambda s: s.v), cs, lrs, chunks)
+                else:
+                    # single-device segment AND sharded segment take the
+                    # same stacked-edge-buffer signature (the sharded
+                    # builder shards the capacity axis over the mesh)
+                    vs, res = step(
+                        stack(lambda s: s.store.src),
+                        stack(lambda s: s.store.dst),
+                        stack(lambda s: s.store.weight),
+                        stack(lambda s: s.v), cs, lrs, chunks)
+                self._tick_invocations += 1
+                # device work is what the hardware executes: every occupancy
+                # slot rides the longest member's chunk budget (short-budget
+                # members freeze under the mask but their slots still step)
+                self._device_work += occ * cfg.steps_per_tick * max_mult
+                if max_mult > 1:
+                    self._multiplied_ticks += 1
+                res = np.asarray(res)
+                for i, sess in enumerate(members):
+                    prev = sess.residual
+                    sess.v = vs[i]
+                    sess.residual = float(res[i])
+                    # fresh decay estimate over the member's OWN executed
+                    # step count (its panel froze after its chunk budget);
+                    # a non-contracting observation resets the forecast
+                    # (the scheduler then stays at plain ticks until
+                    # contraction re-establishes)
+                    sess.rate = program.contraction_rate(
+                        prev, sess.residual,
+                        cfg.steps_per_tick * int(mults[i]))
+                    sess.ticks += 1
+                    out[sess.sid] = sess.residual
+                    if sess.residual <= cfg.tol:
+                        sess.converged = True
+                        st = sess.store
+                        sess.est = updates.anchor_estimate_arrays(
+                            st.src, st.dst, st.weight, sess.v)
         return out
 
     @property
@@ -789,26 +927,30 @@ class StreamingService:
     def live_edges(self, sid: str) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(src, dst, weight) of the session's live edges — the public
         view of the store for consumers building update batches."""
-        st = self._sessions[sid].store
+        st = self._get(sid).store
         w = np.asarray(st.weight)
         live = w != 0
         return np.asarray(st.src)[live], np.asarray(st.dst)[live], w[live]
 
+    def panel(self, sid: str) -> jax.Array:
+        """The session's live eigenvector panel (real rows only) — the
+        immutable embedding snapshot the serving layer commits per
+        result version (repro.serve.results)."""
+        sess = self._get(sid)
+        return sess.v[: sess.n]
+
     def labels(self, sid: str) -> np.ndarray:
         """Current cluster assignment with STABLE ids (tracking.py)."""
         cfg = self.cfg
-        sess = self._sessions[sid]
-        start = 1 if cfg.drop_trivial else 0
-        emb = sess.v[: sess.n, start: start + sess.num_clusters]
-        norms = jnp.linalg.norm(emb, axis=1, keepdims=True)
-        emb = emb / jnp.maximum(norms, 1e-12)
-        res = km.kmeans(
-            jax.random.PRNGKey(cfg.seed + 2), emb, sess.num_clusters,
-            restarts=cfg.kmeans_restarts)
-        return np.asarray(sess.tracker.update(res.labels))
+        sess = self._get(sid)
+        raw = panel_labels(
+            sess.v[: sess.n], sess.num_clusters,
+            drop_trivial=cfg.drop_trivial, seed=cfg.seed,
+            kmeans_restarts=cfg.kmeans_restarts)
+        return np.asarray(sess.tracker.update(raw))
 
     def session_info(self, sid: str) -> dict:
-        return self._summary(self._sessions[sid])
+        return self._summary(self._get(sid))
 
     def _summary(self, sess: _Session) -> dict:
         return {

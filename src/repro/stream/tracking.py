@@ -52,9 +52,37 @@ def match_labels(ref: jax.Array, new: jax.Array, k: int
     return perm[new], perm
 
 
+def label_churn(prev: np.ndarray, new: np.ndarray) -> float:
+    """Fraction of nodes whose STABLE id changed between two servings.
+
+    Both inputs must already be stable-id labellings of the SAME node
+    set (successive `LabelTracker.update` outputs) — after the tracker
+    has absorbed pure permutations, whatever churn remains is genuine
+    community movement.  The serving layer's versioned results store
+    (repro.serve.results) reports this per committed version as the
+    client-visible stability metric backing the stable-ids guarantee.
+    """
+    prev = np.asarray(prev)
+    new = np.asarray(new)
+    if prev.shape != new.shape:
+        raise ValueError(
+            f"label shapes differ: {prev.shape} vs {new.shape}")
+    if prev.size == 0:
+        return 0.0
+    return float(np.mean(prev != new))
+
+
 class LabelTracker:
     """Per-session label continuity: feed each fresh labelling through
-    `update`, read back stable ids."""
+    `update`, read back stable ids.
+
+    The streaming service keeps one tracker per session; the serving
+    layer's versioned results store keeps its own per-session tracker
+    fed in commit order, which is what turns "labels are stable up to
+    relabelling" into a client-visible guarantee: cluster 3 today is
+    cluster 3 after tonight's re-solve unless the community itself
+    moved (measured by :func:`label_churn`).
+    """
 
     def __init__(self, num_clusters: int):
         self.k = num_clusters

@@ -158,6 +158,39 @@ def test_tick_segment_matches_per_session_chunks():
         assert abs(float(out_r[i]) - float(res)) <= 1e-5
 
 
+def test_tick_per_session_chunk_vector_freezes_each_budget():
+    """A (G,) chunk vector runs each session exactly its OWN budget —
+    session i with budget c_i matches an independent run of c_i * steps
+    solver steps, while the one program executes max(c) chunks (the
+    per-session freeze mask behind the per-session tick multipliers)."""
+    gs_ = [_rand_graph(30 + i, 40, 150) for i in range(3)]
+    cap = max(g.num_edges for g in gs_)
+    gs_ = [lap.pad_edge_list(g, cap) for g in gs_]
+    vs = jnp.stack([_panel(40 + i, 40, 4) for i in range(3)])
+    cs = jnp.asarray([0.01, 0.02, 0.04], jnp.float32)
+    lrs = jnp.asarray([0.1, 0.3, 0.5], jnp.float32)
+    budgets = [1, 2, 3]
+    sched = program.StepSchedule(method="mu_eg", degree=5, steps=3)
+    fn = program.build_tick_program(sched)
+    out_v, out_r = fn(
+        jnp.stack([g.src for g in gs_]),
+        jnp.stack([g.dst for g in gs_]),
+        jnp.stack([g.weight for g in gs_]),
+        vs, cs, lrs, jnp.asarray(budgets, jnp.int32))
+    step_fn = solvers.STEP_FNS["mu_eg"]
+    for i, g in enumerate(gs_):
+        opv = operators.dilated_operator_arrays(
+            g.src, g.dst, g.weight, cs[i], 5)
+        st = solvers.SolverState(v=vs[i], step=jnp.zeros((), jnp.int32))
+        st, res = jax.jit(lambda s, n: program.run_chunk(
+            opv, step_fn, s, lrs[i], n),
+            static_argnums=1)(st, 3 * budgets[i])
+        assert float(jnp.max(jnp.abs(out_v[i] - st.v))) <= 1e-5, i
+        # frozen sessions keep the residual measured at their LAST live
+        # chunk; the independent run measures at the same step count
+        assert abs(float(out_r[i]) - float(res)) <= 1e-5, i
+
+
 # ---------------------------------------------------------------------------
 # schedules
 # ---------------------------------------------------------------------------

@@ -17,7 +17,9 @@ from repro.core.series import limit_neg_exp
 from repro.core.laplacian import spectral_radius_upper_bound
 from repro.stream import graph_store as gs
 from repro.stream import tracking, updates, warm
-from repro.stream.service import ServiceConfig, StreamingService
+from repro.stream.service import (
+    ServiceConfig, StreamingService, UnknownSessionError,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -428,3 +430,83 @@ def test_edgeless_admission_recovers_after_updates(backend):
     assert np.isfinite(res)
     assert sess.rho > 0.0
     assert bool(jnp.all(jnp.isfinite(sess.v)))
+
+
+# ---------------------------------------------------------------------------
+# typed session errors, converged re-entry, per-session multipliers
+# ---------------------------------------------------------------------------
+
+def test_unknown_session_raises_typed_error():
+    """Unknown/evicted sids raise UnknownSessionError (a KeyError
+    subclass, so pre-typed callers keep working) from every session
+    accessor — and evict is NOT idempotent."""
+    svc = StreamingService(dataclasses.replace(SVC_CFG, steps_per_tick=5))
+    g, _ = graphs.ring_of_cliques(3, 6)
+    svc.add_graph("here", g, num_clusters=3)
+    for fn in (svc.labels, svc.session_info, svc.evict, svc.panel,
+               svc.live_edges):
+        with pytest.raises(UnknownSessionError, match="never"):
+            fn("never")
+    with pytest.raises(UnknownSessionError):
+        svc.apply_updates("never", [[0, 1]], [1.0])
+    assert issubclass(UnknownSessionError, KeyError)
+    summary = svc.evict("here")  # first evict succeeds...
+    assert summary["n"] == g.num_nodes
+    with pytest.raises(UnknownSessionError, match="here"):
+        svc.evict("here")  # ...the double evict reports the id as gone
+    with pytest.raises(UnknownSessionError, match="here"):
+        svc.labels("here")
+
+
+def test_converged_session_reenters_ticking_after_update():
+    """Regression: an edge batch that moves a CONVERGED session's
+    residual back above tolerance must re-enter it into its tick group
+    on the next tick() — before the fix the first-order update path
+    marked the panel patched and the session stayed 'converged' with a
+    stale residual forever (no fallback, no ticks)."""
+    cfg = dataclasses.replace(SVC_CFG, steps_per_tick=25, tol=5e-4)
+    svc = StreamingService(cfg)
+    g, _ = graphs.sbm_graph(60, 3, p_in=0.4, p_out=0.02, seed=3)
+    svc.add_graph("s", g, num_clusters=3, edge_capacity=1024)
+    assert svc.run_until_converged(max_ticks=400) < 400
+    info = svc.session_info("s")
+    assert info["converged"] and info["residual"] <= cfg.tol
+    # a small real perturbation: two weak cross-community edges, well
+    # under the drift bound (2*sum|dw| = 0.08 << 0.5 * ~0.44 min gap)
+    # so the first-order path handles it, yet the patched panel's
+    # re-measured residual lands back above the tight tolerance
+    svc.apply_updates("s", [[0, 25], [5, 30]], [0.02, 0.02], mode="add")
+    info = svc.session_info("s")
+    assert info["fallbacks"] == 0  # cheap path, not a re-solve
+    assert not info["converged"]  # re-entered: residual re-measured
+    assert info["residual"] > cfg.tol
+    ticks_before = info["ticks"]
+    assert svc.run_until_converged(max_ticks=400) < 400
+    info = svc.session_info("s")
+    assert info["converged"] and info["ticks"] > ticks_before
+
+
+def test_mixed_contraction_group_schedules_per_session():
+    """Regression: the residual-decay multiplier is PER SESSION — a
+    near-converged member no longer drags far-from-converged peers in
+    the same tick group down to multiplier 1 (the old group-min)."""
+    cfg = dataclasses.replace(SVC_CFG, steps_per_tick=5,
+                              max_tick_multiplier=8, eval_payoff=2.0)
+    svc = StreamingService(cfg)
+    for i, sid in enumerate(("near", "far")):
+        g, _ = graphs.sbm_graph(60, 3, p_in=0.4, p_out=0.02, seed=40 + i)
+        svc.add_graph(sid, g, num_clusters=3, edge_capacity=1024)
+    near, far = svc._sessions["near"], svc._sessions["far"]
+    # pin the forecasts: 'near' is one plain tick from tolerance,
+    # 'far' needs far more than eval_payoff plain ticks
+    near.residual, near.rate = cfg.tol * 1.5, 0.8
+    far.residual, far.rate = 0.5, 0.995
+    mults = svc._tick_multipliers([near, far])
+    assert mults[0] == 1  # the old min() would have forced BOTH to 1
+    assert mults[1] == cfg.max_tick_multiplier
+    before = svc.multiplied_ticks
+    svc.tick()
+    # the mixed group still counted as a multiplied (stretched) tick,
+    # through the one shared compiled program
+    assert svc.multiplied_ticks == before + 1
+    assert len({key for key, _ in svc._compiled}) == 1
