@@ -83,6 +83,36 @@ def _child(num_devices: int) -> list:
                  f"degree=7,steps=5,edge_cap={sess['edge_capacity']},"
                  f"rho={sess['rho']:.3g}"))
 
+    # --- panel-sharded model tick (weak scaling of the fused path) ----
+    # the derived column carries the trace-time collective budget: the
+    # mu-EG model tick must issue EXACTLY ONE fused (rows+gram) psum
+    # per solver step at EVERY device count
+    import numpy as np
+
+    from repro.core import program
+
+    mmesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, d), ("data", "model"))
+    mb = backend_mod.build_model_sharded_blocking(
+        np.asarray(g.src), np.asarray(g.dst), np.asarray(g.weight),
+        N, d, block_n=512)
+    sched = program.StepSchedule(method="mu_eg", degree=7, steps=5,
+                                 backend="segment")
+    tick = program.build_tick_model_sharded(
+        sched, mmesh, ("model",), mb.block_n, mb.num_chunks, mb.block_e)
+    v0 = jax.random.normal(jax.random.PRNGKey(2), (1, N, 6))
+    args = (mb.u_local[None], mb.other[None], mb.weight[None],
+            mb.chunk_block[None], mb.deg[None], v0,
+            jnp.asarray([0.01], jnp.float32),
+            jnp.asarray([0.3], jnp.float32), jnp.asarray(1, jnp.int32))
+    with program.count_psums() as st:
+        jax.eval_shape(tick, *args)
+    us = time_call(lambda: tick(*args), iters=3)
+    rows.append((f"distributed/model_tick_warm_n{N}_d{d}", round(us, 1),
+                 f"degree=7,steps=5,shards={d},"
+                 f"fused_psums={st.fused},plain_psums={st.plain},"
+                 f"padded_half_edges={mb.padded_half_edges}"))
+
     # --- acceptance row: sharded node-blocked pallas solve ------------
     # (only at the top device count — interpret-mode pallas is slow)
     if d == max(DEVICE_COUNTS):
@@ -146,6 +176,9 @@ def run():
                 weak[f"tick_warm_us_d{d}"] = us
             if name.startswith(f"distributed/matvec_n{N}_d"):
                 weak[f"matvec_us_d{d}"] = us
+            if name.startswith(f"distributed/model_tick_warm_n{N}_d"):
+                weak[f"model_tick_warm_us_d{d}"] = us
+                assert "fused_psums=1," in derived, derived
     write_bench_json("distributed", rows, extra={
         "weak_scaling": {
             "n": N,

@@ -30,7 +30,9 @@ from repro.core.series import (  # noqa: F401
 )
 from repro.core.backend import (  # noqa: F401
     BACKENDS,
+    ModelShardedBlocking,
     NodeBlocking,
+    build_model_sharded_blocking,
     build_node_blocking,
     kernel_interpret,
     resolve_backend,
@@ -43,8 +45,10 @@ from repro.core.solvers import (  # noqa: F401
     init_state,
     make_step_fn,
     mu_eg_step,
+    mu_eg_step_from_gram,
     mu_eg_step_fused,
     oja_step,
+    panel_gram2k,
     run_solver,
     steps_to_streak,
     steps_to_tolerance,
@@ -59,6 +63,7 @@ from repro.core.program import (  # noqa: F401
     StepSchedule,
     apply_solver_step,
     build_tick_program,
+    count_psums,
     run_chunk,
     run_program,
     schedule_degrees,

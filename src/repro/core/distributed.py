@@ -122,17 +122,17 @@ def sharded_blocked_matvec(mesh: Mesh, blocking, edge_axes=("data",),
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(spec_s, spec_s, spec_s, spec_s, P()),
+        in_specs=(spec_s, spec_s, spec_s, spec_s, spec_s, P()),
         out_specs=P(),
         check_vma=False)  # pallas_call has no replication rule
-    def mv(u_local, other, w, deg, v):
-        local = es_ops.shard_local_blocking(u_local, other, w, deg,
+    def mv(u_local, other, w, cb, deg, v):
+        local = es_ops.shard_local_blocking(u_local, other, w, cb, deg,
                                             **static)
         out = es_ops.edge_spmm_blocked(local, v, interpret=interp)
         return jax.lax.psum(out, edge_axes)
 
     return lambda v: mv(blocking.u_local, blocking.other, blocking.weight,
-                        blocking.deg, v)
+                        blocking.chunk_block, blocking.deg, v)
 
 
 def distributed_series_operator(
@@ -176,12 +176,12 @@ def distributed_series_operator(
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(spec_e, spec_e, spec_e, spec_e, P()),
+            in_specs=(spec_e, spec_e, spec_e, spec_e, spec_e, P()),
             out_specs=P(),
             check_vma=False)  # pallas_call has no replication rule
-        def series_program(u_local, other, w, deg, v):
-            local = es_ops.shard_local_blocking(u_local, other, w, deg,
-                                                **static)
+        def series_program(u_local, other, w, cb, deg, v):
+            local = es_ops.shard_local_blocking(u_local, other, w, cb,
+                                                deg, **static)
 
             def fused(u, alpha, beta):
                 lu = jax.lax.psum(
@@ -193,7 +193,7 @@ def distributed_series_operator(
 
         return lambda v: series_program(
             blocking.u_local, blocking.other, blocking.weight,
-            blocking.deg, v)
+            blocking.chunk_block, blocking.deg, v)
 
     bb = backend_mod.resolve_for_arrays(b, g.num_nodes)
 

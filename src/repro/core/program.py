@@ -39,6 +39,7 @@ scheduler and its predicted-contraction stopping are built on them.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -184,18 +185,77 @@ def schedule_degrees(max_degree: int) -> tuple[int, ...]:
 
 
 # ---------------------------------------------------------------------------
+# collective accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PsumStats:
+    """Trace-time psum-call counts of a shard_mapped tick program.
+
+    ``fused`` counts TUPLE psums (several operands in one call — XLA
+    lowers them to ONE variadic all-reduce), ``plain`` single-operand
+    calls.  Loop bodies (scan/fori) trace once, so the counts are per
+    TRACED body, independent of step counts: the model-sharded tick's
+    contract — exactly one fused collective per solver step — shows up
+    as ``fused == 1``.
+    """
+
+    plain: int = 0
+    fused: int = 0
+
+
+_PSUM_STATS: PsumStats | None = None
+
+
+@contextlib.contextmanager
+def count_psums():
+    """Count collective calls issued while TRACING under this context
+    (e.g. ``jax.eval_shape`` of a tick program) — the weak-scaling
+    benchmarks' and tests' fused-collective assertion hook."""
+    global _PSUM_STATS
+    prev, _PSUM_STATS = _PSUM_STATS, PsumStats()
+    try:
+        yield _PSUM_STATS
+    finally:
+        _PSUM_STATS = prev
+
+
+def _psum(x, axes):
+    """jax.lax.psum routed through the trace-time counter.  Every
+    collective the tick builders below issue goes through here."""
+    if _PSUM_STATS is not None:
+        if isinstance(x, tuple):
+            _PSUM_STATS.fused += 1
+        else:
+            _PSUM_STATS.plain += 1
+    return jax.lax.psum(x, axes)
+
+
+# ---------------------------------------------------------------------------
 # the solver step — THE single construction site
 # ---------------------------------------------------------------------------
 
 def apply_solver_step(step_fn, state: solvers.SolverState, av: jax.Array,
-                      lr) -> solvers.SolverState:
+                      lr, gram: jax.Array | None = None
+                      ) -> solvers.SolverState:
     """THE construction site of the mu-EG/Oja dilated solver step.
 
     Every solve loop in the repo — one-shot, streaming segment/pallas
-    ticks, sharded class ticks, distributed series solves, warm
-    reconvergence chunks — applies its solver update through this call;
-    nothing else composes an operator application with a solver step.
+    ticks, sharded class ticks, model-sharded panel ticks, distributed
+    series solves, warm reconvergence chunks — applies its solver update
+    through this call; nothing else composes an operator application
+    with a solver step.
+
+    ``gram`` is the fused-collective hook: when the caller already holds
+    the global 2k x 2k gram of [V | AV] (a model-sharded tick psums
+    per-shard grams fused with its panel assembly), the mu-EG update
+    runs as the row-local mix :func:`solvers.mu_eg_step_from_gram` on
+    whatever row slice ``state``/``av`` hold — no second panel
+    reduction.  ``gram=None`` is every other path: the step function
+    computes its own panel products.
     """
+    if gram is not None:
+        return solvers.mu_eg_step_from_gram(state, av, gram, lr)
     return step_fn(state, av, lr)
 
 
@@ -333,8 +393,8 @@ def _mapped_step(step_fn):
     return step_all
 
 
-def _blocked_opv_all(u_local, other, w, deg, cs, degree: int,
-                     block_n: int, chunks: int, block_e: int,
+def _blocked_opv_all(u_local, other, w, cb, deg, cs, degree: int,
+                     block_n: int, num_chunks: int, block_e: int,
                      interpret: bool, edge_axes=None):
     """Group dilated operator over stacked node-blocked pallas layouts.
 
@@ -342,22 +402,23 @@ def _blocked_opv_all(u_local, other, w, deg, cs, degree: int,
     inside each device's slice) and every matvec psums; the dilation
     AXPY then applies post-psum (the collective is the fusion barrier).
     Without it the single-device kernel fuses ``alpha=-c, beta=1`` into
-    its epilogue.
+    its epilogue.  ``cb`` is the per-session (or per-shard) stacked
+    chunk->block index map of the CSR chunk layout.
     """
     def local_mv(args):
         # shard_map-local slices: the leading shard axis is partitioned
         # down to size 1 inside the body (es_ops.shard_local_blocking)
-        ul, ot, wt, dg, x = args
+        ul, ot, wt, cbv, dg, x = args
         nb = es_ops.shard_local_blocking(
-            ul, ot, wt, dg, block_n=block_n, block_e=block_e,
-            chunks_per_block=chunks, num_nodes=x.shape[0])
+            ul, ot, wt, cbv, dg, block_n=block_n, block_e=block_e,
+            num_chunks=num_chunks, num_nodes=x.shape[0])
         return es_ops.edge_spmm_blocked(nb, x, interpret=interpret)
 
     def fused_mv(args):
-        ul, ot, wt, dg, x, c = args
+        ul, ot, wt, cbv, dg, x, c = args
         nb = es_ops.NodeBlocking(
-            u_local=ul, other=ot, weight=wt, deg=dg, block_n=block_n,
-            block_e=block_e, chunks_per_block=chunks,
+            u_local=ul, other=ot, weight=wt, chunk_block=cbv, deg=dg,
+            block_n=block_n, block_e=block_e, num_chunks=num_chunks,
             num_nodes=x.shape[0])
         return es_ops.edge_spmm_blocked(nb, x, alpha=-c, beta=1.0,
                                         interpret=interpret)
@@ -365,11 +426,13 @@ def _blocked_opv_all(u_local, other, w, deg, cs, degree: int,
     def opv_all(us):
         def body(_, xs):
             if edge_axes is not None:
-                lxs = jax.lax.psum(
-                    jax.lax.map(local_mv, (u_local, other, w, deg, xs)),
+                lxs = _psum(
+                    jax.lax.map(local_mv,
+                                (u_local, other, w, cb, deg, xs)),
                     edge_axes)
                 return xs - cs[:, None, None] * lxs
-            return jax.lax.map(fused_mv, (u_local, other, w, deg, xs, cs))
+            return jax.lax.map(fused_mv,
+                               (u_local, other, w, cb, deg, xs, cs))
         return jax.lax.fori_loop(0, degree, body, us)
 
     return opv_all
@@ -400,22 +463,24 @@ def build_tick_segment(schedule: StepSchedule):
 
 
 def build_tick_pallas(schedule: StepSchedule, block_n: int,
-                      chunks_per_block: int, block_e: int):
+                      num_chunks: int, block_e: int):
     """Single-device pallas tick:
-    fn(u_local, other, w, deg, vs, cs, lrs, chunks).
+    fn(u_local, other, w, cb, deg, vs, cs, lrs, chunks).
 
     The dilated matvec runs the node-blocked incidence-SpMM kernel with
     the dilation AXPY (alpha=-c, beta=1) fused into its epilogue, and
     the solver step uses the fused mu-EG kernel; sessions advance under
     ``lax.map`` (pallas grids don't vmap across the session axis).
+    ``cb`` is the stacked (G, NC+1) chunk->block map steering the
+    kernel's scalar-prefetched BlockSpecs.
     """
     interp = backend_mod.kernel_interpret()
     step_fn = solvers.make_step_fn(schedule.method, "pallas")
     degree, steps = schedule.degree, schedule.steps
 
-    def tick(u_local, other, w, deg, vs, cs, lrs, chunks):
-        opv_all = _blocked_opv_all(u_local, other, w, deg, cs, degree,
-                                   block_n, chunks_per_block, block_e,
+    def tick(u_local, other, w, cb, deg, vs, cs, lrs, chunks):
+        opv_all = _blocked_opv_all(u_local, other, w, cb, deg, cs, degree,
+                                   block_n, num_chunks, block_e,
                                    interp)
         return _group_loop(opv_all, _mapped_step(step_fn), vs, lrs,
                            steps, chunks)
@@ -442,7 +507,7 @@ def build_tick_sharded_segment(schedule: StepSchedule, mesh, edge_axes):
 
         def opv_all(us):
             def body(_, xs):
-                lxs = jax.lax.psum(local_mv(src, dst, w, xs), edge_axes)
+                lxs = _psum(local_mv(src, dst, w, xs), edge_axes)
                 return xs - cs[:, None, None] * lxs
             return jax.lax.fori_loop(0, degree, body, us)
 
@@ -453,11 +518,11 @@ def build_tick_sharded_segment(schedule: StepSchedule, mesh, edge_axes):
 
 
 def build_tick_sharded_pallas(schedule: StepSchedule, mesh, edge_axes,
-                              block_n: int, chunks_per_block: int,
+                              block_n: int, num_chunks: int,
                               block_e: int):
     """Sharded pallas tick: per-shard node-blocked kernels + one psum.
 
-    fn(u_local, other, w, deg, vs, cs, lrs, chunks) with (G, S, ...)
+    fn(u_local, other, w, cb, deg, vs, cs, lrs, chunks) with (G, S, ...)
     stacked per-shard layouts sharded over ``edge_axes`` along the
     shard axis; the AXPY applies post-psum (beta must apply exactly
     once, so the kernel-epilogue fusion is single-device-only) and the
@@ -470,12 +535,13 @@ def build_tick_sharded_pallas(schedule: StepSchedule, mesh, edge_axes,
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(spec_b, spec_b, spec_b, spec_b, P(), P(), P(), P()),
+        in_specs=(spec_b, spec_b, spec_b, spec_b, spec_b,
+                  P(), P(), P(), P()),
         out_specs=(P(), P()),
         check_vma=False)  # pallas_call has no replication rule
-    def tick(u_local, other, w, deg, vs, cs, lrs, chunks):
-        opv_all = _blocked_opv_all(u_local, other, w, deg, cs, degree,
-                                   block_n, chunks_per_block, block_e,
+    def tick(u_local, other, w, cb, deg, vs, cs, lrs, chunks):
+        opv_all = _blocked_opv_all(u_local, other, w, cb, deg, cs, degree,
+                                   block_n, num_chunks, block_e,
                                    interp, edge_axes=edge_axes)
         return _group_loop(opv_all, _mapped_step(step_fn), vs, lrs,
                            steps, chunks)
@@ -483,19 +549,170 @@ def build_tick_sharded_pallas(schedule: StepSchedule, mesh, edge_axes,
     return jax.jit(tick)
 
 
+def num_model_shards(mesh, model_axes=("model",)) -> int:
+    """Product of the mesh's panel-sharding axis sizes."""
+    s = 1
+    for a in model_axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def build_tick_model_sharded(schedule: StepSchedule, mesh, model_axes,
+                             block_n: int, num_chunks: int, block_e: int):
+    """PANEL-sharded tick: fn(u_local, other, w, cb, deg, vs, cs, lrs,
+    chunks) over destination-aligned per-shard layouts
+    (:class:`~repro.kernels.edge_spmm.ops.ModelShardedBlocking`, stacked
+    (G, S, ...) and sharded over ``model_axes`` along the shard axis).
+
+    Each shard owns a contiguous row range of the (n, k) panel outright:
+    its local matvec rows are FINAL (the dilation AXPY fuses back into
+    the per-shard kernel epilogue — unlike the edge-sharded ticks, where
+    beta must wait for the psum), and the collectives per dilated apply
+    merely ASSEMBLE disjoint row ranges.  The mu-EG step then needs only
+    the global 2k x 2k gram of [V | AV] (``solvers.panel_gram2k``), which
+    is a sum of per-shard grams over owned rows — so the LAST matvec of
+    the dilation ships its row assembly and the grams in ONE fused
+    collective::
+
+        av_full, grams = psum((embed(av_rows), gram_s), model_axes)
+
+    and every shard mixes its rows row-locally
+    (:func:`apply_solver_step` with ``gram=``) with zero further
+    communication.  Per solver step: ``degree`` psums total, EXACTLY ONE
+    of them fused — the gram costs no extra collective over the matvecs
+    the dilation already pays (the gather-then-gram alternative pays
+    ``degree + 1``).  ``count_psums`` asserts this at trace time.
+
+    ``schedule.backend`` picks the per-shard row computation: the
+    scalar-prefetched chunk kernel ("pallas") or the segment
+    gather/scatter over the same layout arrays ("segment"/"auto"
+    off-TPU).  Oja has no gram form (its QR retraction needs the full
+    panel), so it assembles plainly and steps replicated — mu-EG is the
+    fused-collective path.
+    """
+    interp = backend_mod.kernel_interpret()
+    use_kernel = backend_mod.resolve_backend(schedule.backend) == "pallas"
+    step_fn = solvers.make_step_fn(schedule.method, schedule.backend)
+    fused_gram = schedule.method == "mu_eg"
+    degree, steps = schedule.degree, schedule.steps
+    num_shards = num_model_shards(mesh, model_axes)
+    spec_b = P(None, model_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_b, spec_b, spec_b, spec_b, spec_b,
+                  P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)  # pallas_call has no replication rule
+    def tick(u_local, other, w, cb, deg, vs, cs, lrs, chunks):
+        g, n, k = vs.shape
+        rows = deg.shape[-1]
+        n_pad = num_shards * rows
+        sidx = jnp.zeros((), jnp.int32)
+        for a in model_axes:
+            sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        row_start = sidx * rows
+        vp = jnp.pad(vs.astype(jnp.float32),
+                     ((0, 0), (0, n_pad - n), (0, 0)))
+
+        def mv_one(args):
+            ul, ot, wt, cbv, dg, xf, c = args
+            ab = jnp.stack([-c, jnp.ones_like(c)]).astype(jnp.float32)
+            return es_ops.model_local_rows(
+                ul[0], ot[0], wt[0], cbv[0], dg[0], xf, ab, row_start,
+                block_n=block_n, block_e=block_e, num_chunks=num_chunks,
+                padded_nodes=n_pad, use_kernel=use_kernel,
+                interpret=interp)
+
+        def mv_all(full):
+            # (G, n_pad, k) replicated -> (G, rows, k) FINAL owned rows
+            # of (I - c L) applied per session
+            return jax.lax.map(
+                mv_one, (u_local, other, w, cb, deg, full, cs))
+
+        def embed(ys):
+            z = jnp.zeros((g, n_pad, k), jnp.float32)
+            return jax.lax.dynamic_update_slice(z, ys, (0, row_start, 0))
+
+        def dilated_local(full):
+            # degree - 1 matvecs with plain row assembly; the LAST
+            # matvec's rows stay local so its assembly can fuse with
+            # whatever reduction the caller needs next
+            def body(_, fz):
+                return _psum(embed(mv_all(fz)), model_axes)
+            fz = jax.lax.fori_loop(0, degree - 1, body, full)
+            return mv_all(fz)
+
+        def step_one(vv, st, av, lr, gr=None):
+            return apply_solver_step(
+                step_fn, solvers.SolverState(v=vv, step=st), av, lr,
+                gram=gr)
+
+        def step_body(carry, _):
+            vloc, full, stepc = carry
+            av_loc = dilated_local(full)
+            if fused_gram:
+                grams = jax.vmap(solvers.panel_gram2k)(vloc, av_loc)
+                # THE fused collective: row assembly + gram reduction
+                av_full, grams = _psum((embed(av_loc), grams), model_axes)
+                stepped = jax.vmap(step_one)(vloc, stepc, av_loc, lrs,
+                                             grams)
+                new_full = jax.vmap(step_one)(full, stepc, av_full, lrs,
+                                              grams).v
+                return (stepped.v, new_full, stepped.step), None
+            # no gram form (oja): assemble plainly, step replicated
+            av_full = _psum(embed(av_loc), model_axes)
+            stepped = jax.vmap(step_one)(full, stepc, av_full, lrs)
+            new_loc = jax.lax.dynamic_slice(
+                stepped.v, (0, row_start, 0), (g, rows, k))
+            return (new_loc, stepped.v, stepped.step), None
+
+        per_session = jnp.broadcast_to(jnp.asarray(chunks, jnp.int32),
+                                       (g,))
+        vloc0 = jax.lax.dynamic_slice(vp, (0, row_start, 0),
+                                      (g, rows, k))
+        carry0 = (vloc0, vp, jnp.zeros((g,), jnp.int32))
+
+        def chunk_body(i, carry):
+            stepped, _ = jax.lax.scan(step_body, carry, None,
+                                      length=steps)
+            live = i < per_session  # (G,) freeze mask past the budget
+            return tuple(
+                jnp.where(live.reshape((g,) + (1,) * (s.ndim - 1)), s, c)
+                for s, c in zip(stepped, carry))
+
+        _, full, _ = jax.lax.fori_loop(0, jnp.max(per_session),
+                                       chunk_body, carry0)
+        av_full = _psum(embed(dilated_local(full)), model_axes)
+        res = jax.vmap(metrics.panel_residual)(full, av_full)
+        return full[:, :n, :], res
+
+    return jax.jit(tick)
+
+
 def build_tick_program(schedule: StepSchedule, *, layout=None, mesh=None,
-                       edge_axes=("data",)):
+                       edge_axes=("data",), model_axes=None):
     """One compiled batched tick program for a session group.
 
     ``layout`` is None for the segment operator source or the pallas
-    blocking statics ``(block_n, chunks_per_block, block_e)``; ``mesh``
-    switches to the shard_mapped variants.  The streaming service keys
+    blocking statics ``(block_n, num_chunks, block_e)``; ``mesh``
+    switches to the shard_mapped variants; ``model_axes`` (with a mesh
+    and a layout) selects the PANEL-sharded tick over destination-
+    aligned layouts (:func:`build_tick_model_sharded` — one fused
+    rows+gram collective per solver step).  The streaming service keys
     the returned program by its (capacity class, degree, layout,
     occupancy bucket, schedule statics); the per-session lr/scale AND
     the scheduler's tick multipliers (scalar or per-session ``(G,)``
     chunk budgets — see :func:`_group_loop`) are traced inputs — the
     whole adaptive layer moves underneath one compiled program.
     """
+    if mesh is not None and model_axes is not None:
+        if layout is None:
+            raise ValueError(
+                "the model-sharded tick needs the blocking layout "
+                "statics (block_n, num_chunks, block_e)")
+        return build_tick_model_sharded(schedule, mesh, model_axes,
+                                        *layout)
     if mesh is not None and layout is not None:
         return build_tick_sharded_pallas(schedule, mesh, edge_axes, *layout)
     if mesh is not None:
@@ -539,14 +756,18 @@ def predicted_steps_to_tol(res: float, rate: float | None,
 
 
 __all__ = [
+    "PsumStats",
     "StepSchedule",
     "apply_solver_step",
+    "build_tick_model_sharded",
     "build_tick_pallas",
     "build_tick_program",
     "build_tick_segment",
     "build_tick_sharded_pallas",
     "build_tick_sharded_segment",
     "contraction_rate",
+    "count_psums",
+    "num_model_shards",
     "dilation_scale",
     "predicted_residual",
     "predicted_steps_to_tol",

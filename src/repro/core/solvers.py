@@ -100,6 +100,40 @@ def mu_eg_step_fused(state: SolverState, av: jax.Array, lr: float,
     return SolverState(v=v, step=state.step + 1)
 
 
+def panel_gram2k(v: jax.Array, av: jax.Array) -> jax.Array:
+    """2k x 2k gram of the stacked panel [V | AV] — the ONLY panel
+    reduction the mu-EG step needs (see :func:`mu_eg_step_from_gram`).
+
+    Row-decomposable: for any partition of the rows into disjoint
+    slices, the full gram is the SUM of the per-slice grams.  That is
+    what lets a model-sharded tick compute it per shard on owned rows
+    and psum the contributions fused with the panel assembly."""
+    x = jnp.concatenate([v, av], axis=1)
+    return x.T @ x
+
+
+def mu_eg_step_from_gram(state: SolverState, av: jax.Array,
+                         gram: jax.Array, lr) -> SolverState:
+    """mu-EG update from a PRECOMPUTED 2k x 2k gram of [V | AV].
+
+    Same math as :func:`mu_eg_step`: the update is the linear mix
+    V' = (V @ M1 + AV @ M2) * colscale with coefficient matrices derived
+    from the gram alone (repro.kernels.eg_update.ref), so once ``gram``
+    is known the step is ROW-LOCAL — ``state.v``/``av`` may be any row
+    slice of the panel (a model shard's owned rows) as long as ``gram``
+    is the global gram.  This is the fused-collective hook of the
+    model-sharded tick: per-shard grams psum together with the panel
+    assembly, then every shard mixes its own rows with zero further
+    communication.
+    """
+    from repro.kernels.eg_update import ref as eg_ref
+
+    k = state.v.shape[1]
+    m1, m2, colscale = eg_ref.coefficient_matrices(gram, k, lr)
+    vn = (state.v @ m1 + av @ m2) * colscale[None, :]
+    return SolverState(v=vn, step=state.step + 1)
+
+
 STEP_FNS = {"oja": oja_step, "mu_eg": mu_eg_step}
 
 

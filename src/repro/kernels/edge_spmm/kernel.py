@@ -31,8 +31,22 @@ node-blocked variant (``edge_spmm_nb``, any n):
     rows G = V[o].  The kernel then only ever holds a (block_n, k)
     panel slice plus a (BE, block_n) LOCAL one-hot in VMEM:
 
-    out[b]  = deg[b] * V[b]                     (init, j == 0)
+    out[b]  = deg[b] * V[b]                     (init, first chunk of b)
     out[b] -= onehot(u_local)^T @ (w * G_chunk) (BE, block_n) MXU per chunk
+
+    The chunk layout is CSR-style VARIABLE-per-block: a hub node-block
+    owns many chunks, a sparse one owns a single chunk, and the grid is
+    1-D over TOTAL chunks.  A scalar-prefetched chunk->block index map
+    (``PrefetchScalarGridSpec``) steers the deg/panel/output BlockSpecs
+    to the right node-block per chunk, so skewed (power-law) graphs pay
+    sum-of-chunks work instead of blocks * max-chunks uniform padding.
+    Chunks arrive sorted by block, so each output block is revisited
+    contiguously (the Pallas revisiting contract: the block accumulates
+    in VMEM across its run and writes back once) and the per-block init/
+    epilogue fire on the first/last chunk of the run, detected from the
+    prefetched map.  Each (BE, k) gathered slice streams HBM->VMEM via
+    the standard Pallas grid pipeline, i.e. the slice for chunk j+1 is
+    double-buffered behind chunk j's MXU work.
 
 Both kernels end with the fused AFFINE EPILOGUE
 
@@ -51,6 +65,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _edge_spmm_kernel(src_ref, dst_ref, w_ref, v_ref, ab_ref, out_ref):
@@ -104,12 +119,19 @@ def edge_spmm(src: jax.Array, dst: jax.Array, w: jax.Array, v: jax.Array,
     )(src, dst, w, v, ab)
 
 
-def _edge_spmm_nb_kernel(u_ref, w_ref, g_ref, deg_ref, v_ref, ab_ref,
-                         out_ref):
-    j = pl.program_id(1)
-    nj = pl.num_programs(1)
+def _edge_spmm_nb_kernel(cb_ref, u_ref, w_ref, g_ref, deg_ref, v_ref,
+                         ab_ref, out_ref):
+    j = pl.program_id(0)
+    nc = pl.num_programs(0)
+    blk = cb_ref[j]
+    # First/last chunk of this block's (contiguous, block-sorted) run.
+    # cb_ref has nc + 1 entries; the tail sentinel repeats the last block
+    # so cb_ref[j + 1] is always in bounds and never opens a new run.
+    prev = cb_ref[jnp.maximum(j - 1, 0)]
+    is_first = jnp.logical_or(j == 0, prev != blk)
+    is_last = jnp.logical_or(j == nc - 1, cb_ref[j + 1] != blk)
 
-    @pl.when(j == 0)
+    @pl.when(is_first)
     def _init():
         out_ref[...] = deg_ref[...][:, None] * v_ref[...]
 
@@ -121,42 +143,51 @@ def _edge_spmm_nb_kernel(u_ref, w_ref, g_ref, deg_ref, v_ref, ab_ref,
         oh.T, w_ref[...][:, None] * g_ref[...],
         preferred_element_type=jnp.float32)
 
-    @pl.when(j == nj - 1)
+    @pl.when(is_last)
     def _epilogue():
         out_ref[...] = ab_ref[0] * out_ref[...] + ab_ref[1] * v_ref[...]
 
 
 def edge_spmm_nb(u_local: jax.Array, w: jax.Array, gathered: jax.Array,
-                 deg: jax.Array, v: jax.Array, ab: jax.Array,
-                 *, block_n: int, block_e: int, chunks_per_block: int,
-                 interpret: bool = False) -> jax.Array:
-    """Node-blocked Y = alpha * (L V) + beta * V.
+                 chunk_block: jax.Array, deg: jax.Array, v: jax.Array,
+                 ab: jax.Array, *, block_n: int, block_e: int,
+                 num_chunks: int, interpret: bool = False) -> jax.Array:
+    """Node-blocked Y = alpha * (L V) + beta * V, variable chunks/block.
 
-    Half-edges are bucketed by destination node-block (uniform
-    ``chunks_per_block`` chunks per bucket, zero-weight padding), source
-    rows are pre-gathered into ``gathered`` = V[other], and per-block
-    degrees carry the diagonal term.  VMEM per grid step: one
-    (block_n, k) panel slice, one (block_e, k) gathered chunk, and the
-    (block_e, block_n) local one-hot — independent of total n.
+    Half-edges are bucketed by destination node-block into a CSR-style
+    chunk list (ops.build_node_blocking): ``chunk_block`` maps each of
+    the ``num_chunks`` grid steps to its node-block, every block owns at
+    least one chunk, and padding chunks extend the LAST block's run with
+    zero weights.  The map is scalar-prefetched so the deg/panel/output
+    BlockSpecs below index data-dependently per chunk; source rows are
+    pre-gathered into ``gathered`` = V[other] and streamed (BE, k) at a
+    time by the grid pipeline.  VMEM per grid step: one (block_n, k)
+    panel slice, one (block_e, k) gathered chunk, and the
+    (block_e, block_n) local one-hot — independent of total n and of
+    graph skew.
     """
     np_, k = v.shape
-    nb = np_ // block_n
-    c = chunks_per_block
     assert np_ % block_n == 0, (np_, block_n)
-    assert u_local.shape[0] == nb * c * block_e, (u_local.shape, nb, c)
-    grid = (nb, c)
+    assert u_local.shape[0] == num_chunks * block_e, \
+        (u_local.shape, num_chunks, block_e)
+    assert chunk_block.shape[0] == num_chunks + 1, \
+        (chunk_block.shape, num_chunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_chunks,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda j, cb: (j,)),
+            pl.BlockSpec((block_e,), lambda j, cb: (j,)),
+            pl.BlockSpec((block_e, k), lambda j, cb: (j, 0)),
+            pl.BlockSpec((block_n,), lambda j, cb: (cb[j],)),
+            pl.BlockSpec((block_n, k), lambda j, cb: (cb[j], 0)),
+            pl.BlockSpec((2,), lambda j, cb: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda j, cb: (cb[j], 0)),
+    )
     return pl.pallas_call(
         _edge_spmm_nb_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_e,), lambda b, j: (b * c + j,)),
-            pl.BlockSpec((block_e,), lambda b, j: (b * c + j,)),
-            pl.BlockSpec((block_e, k), lambda b, j: (b * c + j, 0)),
-            pl.BlockSpec((block_n,), lambda b, j: (b,)),
-            pl.BlockSpec((block_n, k), lambda b, j: (b, 0)),
-            pl.BlockSpec((2,), lambda b, j: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_n, k), lambda b, j: (b, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((np_, k), jnp.float32),
         interpret=interpret,
-    )(u_local, w, gathered, deg, v, ab)
+    )(chunk_block, u_local, w, gathered, deg, v, ab)

@@ -7,10 +7,17 @@ it up to ``repro.core.backend.ONE_HOT_NODE_LIMIT`` (4096) nodes.
 
 ``build_node_blocking`` + ``edge_spmm_blocked`` are the scalable path:
 edges are expanded host-side into directed half-edges (u <- o, w) and
-bucketed by the node-block of the destination u, with per-bucket chunk
-counts SNAPPED to powers of two so graphs of similar skew share one
-compiled program (the streaming store's capacity-class economics).  The
-kernel then works on (block_n, k) panel slices only — see kernel.py.
+bucketed by the node-block of the destination u into a CSR-style
+VARIABLE-chunks-per-block layout: each block owns ceil(bucket / BE)
+chunks (min 1), a flat chunk->block index map steers the kernel's
+scalar-prefetched BlockSpecs, and only the TOTAL chunk count is
+pow2-snapped so graphs of similar size share one compiled program (the
+streaming store's capacity-class economics) without paying the old
+uniform blocks x max-chunks padding on skewed degree distributions.
+The kernel then works on (block_n, k) panel slices only — see
+kernel.py.  ``build_model_sharded_blocking`` splits the same layout by
+DESTINATION node range so each mesh shard owns its panel rows' output
+outright (the panel-sharding convention of ``core.distributed``).
 """
 from __future__ import annotations
 
@@ -67,15 +74,23 @@ class NodeBlocking(NamedTuple):
     the streaming graph store) and cached alongside the padded edge
     buffers; every matvec/fused-series-step reuses it.  Arrays are
     device-resident; the ints are static and part of the compile key.
+
+    The chunk layout is CSR-style: block b owns ``ceil(bucket_b / BE)``
+    chunks (min 1 so every block is initialized), laid out contiguously
+    in block order; ``chunk_block`` maps chunk -> block for the kernel's
+    scalar-prefetched BlockSpecs.  Padding chunks (total snapped to a
+    power of two) extend the LAST block's run with zero weights, so no
+    block's init/epilogue ever re-fires.
     """
 
-    u_local: jax.Array  # (NB*C*BE,) int32 — dest index local to its block
-    other: jax.Array  # (NB*C*BE,) int32 — global source node per half-edge
-    weight: jax.Array  # (NB*C*BE,) float32 — 0 => padding slot
+    u_local: jax.Array  # (NC*BE,) int32 — dest index local to its block
+    other: jax.Array  # (NC*BE,) int32 — global source node per half-edge
+    weight: jax.Array  # (NC*BE,) float32 — 0 => padding slot
+    chunk_block: jax.Array  # (NC+1,) int32 — block per chunk + tail sentinel
     deg: jax.Array  # (NB*block_n,) float32 — weighted degrees, row-padded
     block_n: int  # nodes per block (static)
     block_e: int  # half-edges per kernel chunk (static)
-    chunks_per_block: int  # C, uniform per bucket (static, pow2-snapped)
+    num_chunks: int  # NC, TOTAL chunks (static, pow2-snapped)
     num_nodes: int  # real node count n (static); NB = ceil(n / block_n)
 
     @property
@@ -85,6 +100,12 @@ class NodeBlocking(NamedTuple):
     @property
     def padded_nodes(self) -> int:
         return self.deg.shape[0]
+
+    @property
+    def padded_half_edges(self) -> int:
+        """Half-edge SLOTS the kernel walks (live + padding) — the work
+        metric the skew benchmarks compare against the uniform layout."""
+        return self.num_chunks * self.block_e
 
 
 def next_pow2(x: int) -> int:
@@ -116,26 +137,60 @@ def _block_sorted_half_edges(src, dst, weight, block_n: int, nb: int):
     return u[order], o[order], w2[order], counts
 
 
-def _chunks_for_counts(counts, block_e: int, snap_chunks: bool) -> int:
+def uniform_chunks_for_counts(counts, block_e: int,
+                              snap_chunks: bool = True) -> int:
+    """Chunks per block under the LEGACY uniform layout (every block
+    pays the worst bucket, pow2-snapped).  Kept as the comparison
+    baseline for the skew benchmarks and property tests."""
     c = max(int(np.ceil(counts.max(initial=0) / block_e)), 1)
     return next_pow2(c) if snap_chunks else c
 
 
-def _fill_buckets(u, o, w2, counts, nb: int, c: int,
+def uniform_padded_half_edges(counts, block_e: int,
+                              snap_chunks: bool = True) -> int:
+    """Half-edge slots the legacy uniform layout would walk:
+    num_blocks * max-chunks * block_e."""
+    nb = int(np.asarray(counts).shape[0])
+    return nb * uniform_chunks_for_counts(counts, block_e, snap_chunks) \
+        * block_e
+
+
+def _chunk_counts(counts, block_e: int):
+    """Per-block chunk counts: ceil(bucket / BE), min 1 so every block
+    gets its init/epilogue pass even when it holds no live half-edges."""
+    counts = np.asarray(counts, np.int64)
+    return np.maximum((counts + block_e - 1) // block_e, 1)
+
+
+def _fill_chunked(u, o, w2, counts, nb: int, nc: int,
                   block_n: int, block_e: int):
-    """Scatter block-sorted half-edges into the uniform (nb, c*block_e)
-    bucket layout; unfilled tail slots stay zero-weight (inert)."""
-    ul = np.zeros((nb, c * block_e), np.int32)
-    ot = np.zeros((nb, c * block_e), np.int32)
-    wt = np.zeros((nb, c * block_e), np.float32)
-    offs = np.concatenate([[0], np.cumsum(counts)])
-    for b in range(nb):
-        lo, hi = offs[b], offs[b + 1]
-        m = hi - lo
-        ul[b, :m] = u[lo:hi] - b * block_n
-        ot[b, :m] = o[lo:hi]
-        wt[b, :m] = w2[lo:hi]
-    return ul, ot, wt
+    """Scatter block-sorted half-edges into the CSR chunk layout.
+
+    Returns (u_local, other, weight, chunk_block) with flat (nc*BE,)
+    half-edge arrays and the (nc+1,) chunk->block map; unfilled slots
+    stay zero-weight (inert) and padding chunks extend the last block's
+    run (sentinel tail included).
+    """
+    cb_counts = _chunk_counts(counts, block_e)
+    chunk_off = np.concatenate([[0], np.cumsum(cb_counts)])
+    nc_raw = int(chunk_off[-1])
+    assert nc >= nc_raw, (nc, nc_raw)
+    ul = np.zeros((nc * block_e,), np.int32)
+    ot = np.zeros((nc * block_e,), np.int32)
+    wt = np.zeros((nc * block_e,), np.float32)
+    total = u.shape[0]
+    if total:
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        blk_of = np.repeat(np.arange(nb, dtype=np.int64), counts)
+        within = np.arange(total, dtype=np.int64) - offs[blk_of]
+        slot = chunk_off[blk_of] * block_e + within
+        ul[slot] = (u - blk_of * block_n).astype(np.int32)
+        ot[slot] = o.astype(np.int32)
+        wt[slot] = w2
+    chunk_block = np.full((nc + 1,), nb - 1, np.int32)
+    chunk_block[:nc_raw] = np.repeat(
+        np.arange(nb, dtype=np.int32), cb_counts)
+    return ul, ot, wt, chunk_block
 
 
 def _weighted_degrees(src, dst, weight, n_pad: int):
@@ -160,26 +215,30 @@ def build_node_blocking(src, dst, weight, num_nodes: int,
     half-edge only records (u_local, other, w).  Zero-weight slots
     (capacity padding in the streaming store) are DROPPED here: they are
     inert anyway, and keeping them would pile the entire padding into
-    node-block 0 and destroy bucket uniformity.  Buckets are padded to a
-    uniform chunk count C (`snap_chunks` rounds C to a power of two so
-    the compile key — and therefore the compiled-program count — stays
-    logarithmic in graph skew).
+    node-block 0.  Blocks own ceil(bucket / block_e) chunks each
+    (CSR-style; min 1), and only the TOTAL chunk count is pow2-snapped
+    (`snap_chunks`) so the compile key — and therefore the
+    compiled-program count — stays logarithmic in graph size while
+    skewed buckets no longer inflate every other block's padding.
     """
     nb = max((num_nodes + block_n - 1) // block_n, 1)
     n_pad = nb * block_n
     u, o, w2, counts = _block_sorted_half_edges(src, dst, weight,
                                                 block_n, nb)
-    c = _chunks_for_counts(counts, block_e, snap_chunks)
-    ul, ot, wt = _fill_buckets(u, o, w2, counts, nb, c, block_n, block_e)
+    nc_raw = int(_chunk_counts(counts, block_e).sum())
+    nc = next_pow2(nc_raw) if snap_chunks else nc_raw
+    ul, ot, wt, cb = _fill_chunked(u, o, w2, counts, nb, nc,
+                                   block_n, block_e)
     deg = _weighted_degrees(src, dst, weight, n_pad)
     return NodeBlocking(
-        u_local=jnp.asarray(ul.reshape(-1)),
-        other=jnp.asarray(ot.reshape(-1)),
-        weight=jnp.asarray(wt.reshape(-1)),
+        u_local=jnp.asarray(ul),
+        other=jnp.asarray(ot),
+        weight=jnp.asarray(wt),
+        chunk_block=jnp.asarray(cb),
         deg=jnp.asarray(deg),
         block_n=block_n,
         block_e=block_e,
-        chunks_per_block=c,
+        num_chunks=nc,
         num_nodes=int(num_nodes),
     )
 
@@ -205,13 +264,14 @@ class ShardedNodeBlocking(NamedTuple):
     zero and the psum is unaffected.
     """
 
-    u_local: jax.Array  # (S, NB*C*BE) int32 — dest index local to block
-    other: jax.Array  # (S, NB*C*BE) int32 — global source node
-    weight: jax.Array  # (S, NB*C*BE) float32 — 0 => padding slot
+    u_local: jax.Array  # (S, NC*BE) int32 — dest index local to block
+    other: jax.Array  # (S, NC*BE) int32 — global source node
+    weight: jax.Array  # (S, NC*BE) float32 — 0 => padding slot
+    chunk_block: jax.Array  # (S, NC+1) int32 — per-shard chunk->block map
     deg: jax.Array  # (S, NB*block_n) float32 — PER-SHARD weighted degrees
     block_n: int  # static
     block_e: int  # static
-    chunks_per_block: int  # C, shared across shards (static, pow2)
+    num_chunks: int  # NC, TOTAL chunks, shared across shards (static)
     num_nodes: int  # real node count n (static)
     num_shards: int  # S (static)
 
@@ -227,9 +287,10 @@ class ShardedNodeBlocking(NamedTuple):
         """Single-shard view — what one mesh device computes with."""
         return NodeBlocking(
             u_local=self.u_local[s], other=self.other[s],
-            weight=self.weight[s], deg=self.deg[s],
+            weight=self.weight[s], chunk_block=self.chunk_block[s],
+            deg=self.deg[s],
             block_n=self.block_n, block_e=self.block_e,
-            chunks_per_block=self.chunks_per_block,
+            num_chunks=self.num_chunks,
             num_nodes=self.num_nodes)
 
     @property
@@ -237,12 +298,12 @@ class ShardedNodeBlocking(NamedTuple):
         """The compile-key statics, as kwargs for
         :func:`shard_local_blocking` (and tick-program builders)."""
         return dict(block_n=self.block_n, block_e=self.block_e,
-                    chunks_per_block=self.chunks_per_block,
+                    num_chunks=self.num_chunks,
                     num_nodes=self.num_nodes)
 
 
-def shard_local_blocking(u_local, other, weight, deg, *, block_n: int,
-                         block_e: int, chunks_per_block: int,
+def shard_local_blocking(u_local, other, weight, chunk_block, deg,
+                         *, block_n: int, block_e: int, num_chunks: int,
                          num_nodes: int) -> NodeBlocking:
     """One device's NodeBlocking from shard_map-LOCAL slices of a
     :class:`ShardedNodeBlocking`'s stacked arrays (the leading shard
@@ -251,9 +312,10 @@ def shard_local_blocking(u_local, other, weight, deg, *, block_n: int,
     call site stays in sync when the layout grows fields.
     """
     return NodeBlocking(
-        u_local=u_local[0], other=other[0], weight=weight[0], deg=deg[0],
+        u_local=u_local[0], other=other[0], weight=weight[0],
+        chunk_block=chunk_block[0], deg=deg[0],
         block_n=block_n, block_e=block_e,
-        chunks_per_block=chunks_per_block, num_nodes=num_nodes)
+        num_chunks=num_chunks, num_nodes=num_nodes)
 
 
 def build_sharded_node_blocking(src, dst, weight, num_nodes: int,
@@ -291,49 +353,239 @@ def build_sharded_node_blocking(src, dst, weight, num_nodes: int,
             weight[s * per:(s + 1) * per], block_n, nb)
         for s in range(num_shards)
     ]
-    # ONE chunk count for every shard: shard_map needs identical static
-    # shapes per device, and snapping to the worst shard keeps the
-    # compile key stable under admission-time edge balance wobble.
-    c = _chunks_for_counts(
-        np.stack([counts for _, _, _, counts in shards]).reshape(-1),
-        block_e, snap_chunks)
-    ul = np.zeros((num_shards, nb, c * block_e), np.int32)
-    ot = np.zeros((num_shards, nb, c * block_e), np.int32)
-    wt = np.zeros((num_shards, nb, c * block_e), np.float32)
+    # ONE total chunk count for every shard: shard_map needs identical
+    # static shapes per device, and snapping to the worst shard keeps
+    # the compile key stable under admission-time edge balance wobble.
+    nc_raw = max(int(_chunk_counts(counts, block_e).sum())
+                 for _, _, _, counts in shards)
+    nc = next_pow2(nc_raw) if snap_chunks else nc_raw
+    ul = np.zeros((num_shards, nc * block_e), np.int32)
+    ot = np.zeros((num_shards, nc * block_e), np.int32)
+    wt = np.zeros((num_shards, nc * block_e), np.float32)
+    cb = np.zeros((num_shards, nc + 1), np.int32)
     deg = np.zeros((num_shards, n_pad), np.float32)
     for s, (u, o, w2, counts) in enumerate(shards):
-        ul[s], ot[s], wt[s] = _fill_buckets(u, o, w2, counts, nb, c,
-                                            block_n, block_e)
+        ul[s], ot[s], wt[s], cb[s] = _fill_chunked(
+            u, o, w2, counts, nb, nc, block_n, block_e)
         deg[s] = _weighted_degrees(
             src[s * per:(s + 1) * per], dst[s * per:(s + 1) * per],
             weight[s * per:(s + 1) * per], n_pad)
     return ShardedNodeBlocking(
-        u_local=jnp.asarray(ul.reshape(num_shards, -1)),
-        other=jnp.asarray(ot.reshape(num_shards, -1)),
-        weight=jnp.asarray(wt.reshape(num_shards, -1)),
+        u_local=jnp.asarray(ul),
+        other=jnp.asarray(ot),
+        weight=jnp.asarray(wt),
+        chunk_block=jnp.asarray(cb),
         deg=jnp.asarray(deg),
         block_n=block_n,
         block_e=block_e,
-        chunks_per_block=c,
+        num_chunks=nc,
         num_nodes=int(num_nodes),
         num_shards=int(num_shards),
     )
 
 
+class ModelShardedBlocking(NamedTuple):
+    """DESTINATION-aligned per-shard chunk layouts for panel sharding.
+
+    Where :class:`ShardedNodeBlocking` splits the EDGE BUFFER (each
+    shard sees every node, outputs partial sums, and a psum adds them),
+    this splits the NODE RANGE: shard ``s`` owns panel rows
+    ``[s * R, (s + 1) * R)`` and receives ALL half-edges destined to
+    those rows.  Its local matvec output rows are therefore FINAL — no
+    cross-shard summation — which is what lets a solver step (a) fuse
+    the dilation AXPY back into the kernel epilogue per shard, (b)
+    compute its mu-EG gram contribution on local rows only, and (c)
+    ship rows + gram in ONE fused collective (see
+    ``core.program.build_tick_model_sharded``).  Skew is absorbed by
+    the CSR chunk layout: a shard owning hub nodes simply has more live
+    chunks, and the shared pow2-snapped total keeps shapes identical
+    across shards (a hub shard pads less, a sparse shard pads more).
+
+    ``u_local``/``chunk_block`` are local to the shard's own blocks;
+    ``other`` stays GLOBAL (sources live anywhere), and ``deg`` holds
+    the FULL weighted degrees of the shard's rows (rows are owned
+    outright, so no per-shard degree splitting).
+    """
+
+    u_local: jax.Array  # (S, NC*BE) int32 — dest local to its block
+    other: jax.Array  # (S, NC*BE) int32 — GLOBAL source node
+    weight: jax.Array  # (S, NC*BE) float32 — 0 => padding slot
+    chunk_block: jax.Array  # (S, NC+1) int32 — SHARD-local block map
+    deg: jax.Array  # (S, R) float32 — full degrees of the shard's rows
+    block_n: int  # static
+    block_e: int  # static
+    num_chunks: int  # NC, shared across shards (static, pow2-snapped)
+    num_nodes: int  # real node count n (static)
+    num_shards: int  # S (static)
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.deg.shape[1]
+
+    @property
+    def padded_nodes(self) -> int:
+        return self.num_shards * self.deg.shape[1]
+
+    @property
+    def num_blocks(self) -> int:
+        """Blocks per shard."""
+        return self.deg.shape[1] // self.block_n
+
+    @property
+    def padded_half_edges(self) -> int:
+        """Total half-edge slots across shards."""
+        return self.num_shards * self.num_chunks * self.block_e
+
+    def shard(self, s: int) -> NodeBlocking:
+        """Single-shard view in the shard's LOCAL node coordinates."""
+        return NodeBlocking(
+            u_local=self.u_local[s], other=self.other[s],
+            weight=self.weight[s], chunk_block=self.chunk_block[s],
+            deg=self.deg[s],
+            block_n=self.block_n, block_e=self.block_e,
+            num_chunks=self.num_chunks, num_nodes=self.rows_per_shard)
+
+    @property
+    def statics(self) -> dict:
+        """Compile-key statics for the model-sharded tick builders."""
+        return dict(block_n=self.block_n, block_e=self.block_e,
+                    num_chunks=self.num_chunks, num_nodes=self.num_nodes,
+                    num_shards=self.num_shards)
+
+
+def build_model_sharded_blocking(src, dst, weight, num_nodes: int,
+                                 num_shards: int,
+                                 *, block_n: int = 512, block_e: int = 128,
+                                 snap_chunks: bool = True
+                                 ) -> ModelShardedBlocking:
+    """Host-side destination-aligned chunk layouts for panel sharding.
+
+    Node-blocks are padded to a multiple of ``num_shards`` and assigned
+    contiguously (shard ``s`` owns blocks ``[s * NBs, (s + 1) * NBs)``,
+    i.e. rows ``[s * R, (s + 1) * R)``); every live half-edge lands on
+    the shard owning its DESTINATION row.  Unlike the edge-sharded
+    builder there is no per-shard edge-buffer slicing contract: any
+    (src, dst, weight) buffer works, zero-weight slots are dropped.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    nb_real = max((num_nodes + block_n - 1) // block_n, 1)
+    nb_per = (nb_real + num_shards - 1) // num_shards
+    nb_total = nb_per * num_shards
+    rows = nb_per * block_n
+    n_pad = nb_total * block_n
+    u, o, w2, counts = _block_sorted_half_edges(src, dst, weight,
+                                                block_n, nb_total)
+    deg_full = _weighted_degrees(src, dst, weight, n_pad)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    # shared pow2-snapped total chunk count: identical static shapes per
+    # shard; a hub-heavy shard uses more live chunks, not a new shape
+    nc_raw = max(
+        int(_chunk_counts(counts[s * nb_per:(s + 1) * nb_per],
+                          block_e).sum())
+        for s in range(num_shards))
+    nc = next_pow2(nc_raw) if snap_chunks else nc_raw
+    ul = np.zeros((num_shards, nc * block_e), np.int32)
+    ot = np.zeros((num_shards, nc * block_e), np.int32)
+    wt = np.zeros((num_shards, nc * block_e), np.float32)
+    cb = np.zeros((num_shards, nc + 1), np.int32)
+    deg = np.zeros((num_shards, rows), np.float32)
+    for s in range(num_shards):
+        lo, hi = offs[s * nb_per], offs[(s + 1) * nb_per]
+        ul[s], ot[s], wt[s], cb[s] = _fill_chunked(
+            u[lo:hi] - s * rows,  # shard-local node coordinates
+            o[lo:hi], w2[lo:hi],
+            counts[s * nb_per:(s + 1) * nb_per],
+            nb_per, nc, block_n, block_e)
+        deg[s] = deg_full[s * rows:(s + 1) * rows]
+    return ModelShardedBlocking(
+        u_local=jnp.asarray(ul),
+        other=jnp.asarray(ot),
+        weight=jnp.asarray(wt),
+        chunk_block=jnp.asarray(cb),
+        deg=jnp.asarray(deg),
+        block_n=block_n,
+        block_e=block_e,
+        num_chunks=nc,
+        num_nodes=int(num_nodes),
+        num_shards=int(num_shards),
+    )
+
+
+def model_shard_local_blocking(u_local, other, weight, chunk_block, deg,
+                               *, block_n: int, block_e: int,
+                               num_chunks: int, num_nodes: int,
+                               num_shards: int) -> NodeBlocking:
+    """One device's local-coordinate NodeBlocking from shard_map-LOCAL
+    slices of a :class:`ModelShardedBlocking` (leading shard axis
+    partitioned down to size 1).  ``num_nodes`` of the result is the
+    shard's ROW count, not the global n."""
+    del num_nodes, num_shards  # statics travel for key symmetry only
+    return NodeBlocking(
+        u_local=u_local[0], other=other[0], weight=weight[0],
+        chunk_block=chunk_block[0], deg=deg[0],
+        block_n=block_n, block_e=block_e,
+        num_chunks=num_chunks, num_nodes=deg.shape[1])
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "block_n", "block_e", "chunks_per_block", "interpret"))
-def _edge_spmm_blocked(u_local, other, weight, deg, v, ab,
+    "block_n", "block_e", "num_chunks", "padded_nodes", "use_kernel",
+    "interpret"))
+def model_local_rows(u_local, other, weight, chunk_block, deg,
+                     v: jax.Array, ab: jax.Array, row_start,
+                     *, block_n: int, block_e: int, num_chunks: int,
+                     padded_nodes: int, use_kernel: bool,
+                     interpret: bool = False):
+    """This shard's (R, k) OWNED rows of alpha * (L V) + beta * V.
+
+    ``v`` is the FULL replicated (n, k) panel (sources live anywhere);
+    the layout arrays are one shard's slices of a
+    :class:`ModelShardedBlocking` (shard-local coordinates);
+    ``row_start`` is the (traced) first global row this shard owns.
+    Rows are final — the caller's collective across shards merely
+    assembles disjoint row ranges, it never sums overlapping
+    contributions — so the affine epilogue fuses HERE, per shard, not
+    post-collective.  ``use_kernel`` picks the Pallas chunk kernel vs
+    the segment-sum form (same layout arrays either way).
+    """
+    n, k = v.shape
+    rows = deg.shape[0]
+    v = v.astype(jnp.float32)
+    if use_kernel:
+        pad_k = (-k) % 128
+        vp = jnp.pad(v, ((0, padded_nodes - n), (0, pad_k)))
+        gathered = vp[other]  # (NC*BE, kp) global gather
+        v_rows = jax.lax.dynamic_slice(
+            vp, (row_start, 0), (rows, k + pad_k))
+        out = kernel.edge_spmm_nb(
+            u_local, weight, gathered, chunk_block, deg, v_rows, ab,
+            block_n=block_n, block_e=block_e,
+            num_chunks=num_chunks, interpret=interpret)
+        return out[:, :k]
+    vp = jnp.pad(v, ((0, padded_nodes - n), (0, 0)))
+    blk = jnp.repeat(chunk_block[:num_chunks], block_e)
+    dest = blk * block_n + u_local  # shard-local row ids
+    contrib = weight[:, None] * vp[other]
+    av = jnp.zeros((rows, k), jnp.float32).at[dest].add(contrib)
+    v_rows = jax.lax.dynamic_slice(vp, (row_start, 0), (rows, k))
+    out = deg[:, None] * v_rows - av
+    return ab[0] * out + ab[1] * v_rows
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_n", "block_e", "num_chunks", "interpret"))
+def _edge_spmm_blocked(u_local, other, weight, chunk_block, deg, v, ab,
                        *, block_n: int, block_e: int,
-                       chunks_per_block: int, interpret: bool):
+                       num_chunks: int, interpret: bool):
     n, k = v.shape
     n_pad = deg.shape[0]
     pad_k = (-k) % 128
     vp = jnp.pad(v.astype(jnp.float32), ((0, n_pad - n), (0, pad_k)))
-    gathered = vp[other]  # (NB*C*BE, kp) XLA gather; the scatter is MXU
+    gathered = vp[other]  # (NC*BE, kp) XLA gather; the scatter is MXU
     out = kernel.edge_spmm_nb(
-        u_local, weight, gathered, deg, vp, ab,
+        u_local, weight, gathered, chunk_block, deg, vp, ab,
         block_n=block_n, block_e=block_e,
-        chunks_per_block=chunks_per_block, interpret=interpret)
+        num_chunks=num_chunks, interpret=interpret)
     return out[:n, :k]
 
 
@@ -352,7 +604,8 @@ def edge_spmm_blocked(nb: NodeBlocking, v: jax.Array,
         raise ValueError(
             f"panel rows {v.shape[0]} != blocking num_nodes {nb.num_nodes}")
     out = _edge_spmm_blocked(
-        nb.u_local, nb.other, nb.weight, nb.deg, v, _ab(alpha, beta),
+        nb.u_local, nb.other, nb.weight, nb.chunk_block, nb.deg, v,
+        _ab(alpha, beta),
         block_n=nb.block_n, block_e=nb.block_e,
-        chunks_per_block=nb.chunks_per_block, interpret=interpret)
+        num_chunks=nb.num_chunks, interpret=interpret)
     return out[:, 0] if squeeze else out

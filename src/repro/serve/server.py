@@ -274,18 +274,40 @@ class Server:
         touched = []
         drained = 0
         with self._engine_lock:
+            # Per-capacity-class drain batching: staged sessions group
+            # by their (node, edge) capacity class, and each class pins
+            # ONE batch pad (pow2 of its largest coalesced batch) for
+            # every member's apply.  The compiled edge-batch apply keys
+            # on (capacity class, pad, mode), so the whole class drains
+            # through one compiled apply per mode instead of one per
+            # pow2 batch size per session.
+            classes: dict[tuple, list] = {}
             for sid, buf in staged.items():
                 try:
-                    for edges, ws, mode in buf.flush_batches():
-                        self.service.apply_updates(sid, edges, ws,
-                                                   mode=mode)
-                    touched.append(sid)
-                    drained += buf.batches_staged
-                    self.metrics.inc("applied_batches",
-                                     buf.batches_staged)
+                    ck = self.service.capacity_class(sid)
                 except UnknownSessionError:
                     self.metrics.inc("dropped_batches",
                                      buf.batches_staged)
+                    continue
+                classes.setdefault(ck, []).append(
+                    (sid, buf, list(buf.flush_batches())))
+            if classes:
+                self.metrics.inc("drain_classes", len(classes))
+            for members in classes.values():
+                pad = max((len(edges) for _, _, batches in members
+                           for edges, _, _ in batches), default=0)
+                for sid, buf, batches in members:
+                    try:
+                        for edges, ws, mode in batches:
+                            self.service.apply_updates(
+                                sid, edges, ws, mode=mode, pad_to=pad)
+                        touched.append(sid)
+                        drained += buf.batches_staged
+                        self.metrics.inc("applied_batches",
+                                         buf.batches_staged)
+                    except UnknownSessionError:
+                        self.metrics.inc("dropped_batches",
+                                         buf.batches_staged)
             ticked = {}
             if self.service.session_ids() and not self.service.all_converged:
                 t0 = time.perf_counter()

@@ -278,6 +278,91 @@ def probe_sharded_edge_arrays(
     return program(src, dst, weight, key, n_real)
 
 
+@functools.lru_cache(maxsize=64)
+def _model_probe_program(mesh, model_axes: tuple, block_n: int,
+                         block_e: int, num_chunks: int, num_nodes: int,
+                         num_shards: int, rows: int,
+                         num_probes: int, num_steps: int, backend: str):
+    """Compiled PANEL-sharded SLQ program, cached per (mesh, layout
+    statics, config).
+
+    The matvec decomposes by node ownership instead of by edge slice:
+    each shard computes its OWNED rows of ``L v`` from its
+    destination-aligned chunk layout (``model_local_rows`` — the same
+    row computation the model-sharded tick runs) and one psum assembles
+    the disjoint row ranges.  No shard ever materializes another
+    shard's edges.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import backend as backend_mod
+    from repro.kernels.edge_spmm import ops as es_ops
+
+    use_kernel = backend_mod.resolve_backend(backend) == "pallas"
+    interp = backend_mod.kernel_interpret()
+    n_pad = num_shards * rows
+    spec_b = P(model_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_b,) * 5 + (P(), P()),
+        out_specs=P(),
+        check_vma=False)  # Lanczos scan carries mixed-replication values
+    def probe(u_local, other, weight, chunk_block, deg, key, n_real):
+        sidx = jnp.zeros((), jnp.int32)
+        for a in model_axes:
+            sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        row_start = sidx * rows
+        ab = jnp.asarray([1.0, 0.0], jnp.float32)  # plain L v
+
+        def mv(v):
+            owned = es_ops.model_local_rows(
+                u_local[0], other[0], weight[0], chunk_block[0], deg[0],
+                v[:, None], ab, row_start,
+                block_n=block_n, block_e=block_e, num_chunks=num_chunks,
+                padded_nodes=n_pad, use_kernel=use_kernel,
+                interpret=interp)
+            z = jnp.zeros((n_pad, 1), jnp.float32)
+            full = jax.lax.psum(
+                jax.lax.dynamic_update_slice(z, owned, (row_start, 0)),
+                model_axes)
+            return full[:num_nodes, 0]
+
+        return slq_probe(mv, num_nodes, key,
+                         num_probes=num_probes, num_steps=num_steps,
+                         n_real=n_real)
+
+    return jax.jit(probe)
+
+
+def probe_model_sharded(
+    mesh,
+    blocking,
+    key: jax.Array,
+    n_real: jax.Array,
+    *,
+    model_axes=("model",),
+    num_probes: int = 4,
+    num_steps: int = 24,
+    backend: str = "segment",
+) -> ProbeResult:
+    """SLQ over a PANEL-sharded layout (the model-serving probe path).
+
+    ``blocking`` is a :class:`~repro.kernels.edge_spmm.ops
+    .ModelShardedBlocking`; the quadrature is semantically identical to
+    :func:`probe_edge_arrays` — same Lanczos recurrence, same keys —
+    with the matvec psum-assembled from each shard's owned rows, so the
+    dilation anchors match replicated serving up to summation order.
+    """
+    program = _model_probe_program(
+        mesh, tuple(model_axes), blocking.block_n, blocking.block_e,
+        blocking.num_chunks, blocking.num_nodes, blocking.num_shards,
+        blocking.rows_per_shard, num_probes, num_steps, backend)
+    return program(blocking.u_local, blocking.other, blocking.weight,
+                   blocking.chunk_block, blocking.deg, key, n_real)
+
+
 def probe_graph(
     g: EdgeList,
     key: jax.Array | None = None,

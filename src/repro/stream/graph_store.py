@@ -28,8 +28,10 @@ import numpy as np
 from repro.core.laplacian import EdgeList
 
 # Edge-buffer capacity ladder (powers of two).  Few classes => few
-# compiled programs; headroom on admission makes growth rare.
-CAPACITY_CLASSES = tuple(2 ** p for p in range(8, 25))
+# compiled programs; headroom on admission makes growth rare.  The top
+# rungs (2^25, 2^26 ~ 67M edges) exist for the million-node tier: a
+# streamed n=1M, E~50M power-law graph admits without overflowing.
+CAPACITY_CLASSES = tuple(2 ** p for p in range(8, 27))
 
 
 def capacity_class(num_edges: int, headroom: float = 1.5) -> int:
@@ -320,6 +322,26 @@ def sharded_node_blocking(store: GraphStore, num_shards: int,
     from repro.core import backend as backend_mod
 
     return backend_mod.build_sharded_node_blocking(
+        np.asarray(store.src), np.asarray(store.dst),
+        np.asarray(store.weight), store.num_nodes, num_shards,
+        block_n=min(block_n, store.num_nodes), block_e=block_e)
+
+
+def model_sharded_blocking(store: GraphStore, num_shards: int,
+                           *, block_n: int = 512, block_e: int = 128):
+    """Destination-aligned per-shard layouts of the store's live edges
+    for the PANEL-sharded tick (``core.program.build_tick_model_sharded``)
+    — shard ``s`` owns a contiguous row range of the eigenvector panel
+    and every half-edge destined there.  Cached/invalidated exactly like
+    :func:`node_blocking`.  No edge-buffer balance contract: any
+    capacity works (skew moves live chunks between shards, not shapes),
+    which is what makes this the layout of choice for million-node
+    single-tenant sessions where the PANEL, not the edge buffer, is the
+    scaling ceiling.
+    """
+    from repro.core import backend as backend_mod
+
+    return backend_mod.build_model_sharded_blocking(
         np.asarray(store.src), np.asarray(store.dst),
         np.asarray(store.weight), store.num_nodes, num_shards,
         block_n=min(block_n, store.num_nodes), block_e=block_e)

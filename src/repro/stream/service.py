@@ -190,6 +190,17 @@ class ServiceConfig:
     # stay balanced.  None = single-device ticks (the default).
     mesh: object | None = None
     edge_axes: tuple = ("data",)
+    # PANEL sharding (core.program.build_tick_model_sharded): when set
+    # (with a mesh), every group tick shards the (n, k) panel itself
+    # over these mesh axes — shard s owns rows [s*R, (s+1)*R) and the
+    # destination-aligned half-edges landing there
+    # (graph_store.model_sharded_blocking) — and mu-EG solver steps ship
+    # their row assembly and 2k x 2k gram in ONE fused collective.  This
+    # is the million-node serving mode: no device ever materializes
+    # per-shard panel copies of the edge buffer, and admission probes
+    # route through the same row-sharded matvec.  None = replicated
+    # panels (edge sharding over `edge_axes` if a mesh is set).
+    model_axes: tuple | None = None
     # Residual-decay tick scheduling: "residual_decay" forecasts each
     # SESSION's remaining solver steps from its measured residual decay
     # and gives it its own chunk budget (a TRACED per-session count —
@@ -219,12 +230,14 @@ class ServiceConfig:
             raise ValueError(
                 f"unknown tick_schedule {self.tick_schedule!r}")
         if self.mesh is not None:
-            missing = [a for a in self.edge_axes
-                       if a not in self.mesh.axis_names]
+            axes = tuple(self.edge_axes) + tuple(self.model_axes or ())
+            missing = [a for a in axes if a not in self.mesh.axis_names]
             if missing:
                 raise ValueError(
-                    f"edge_axes {missing} not in mesh axes "
+                    f"mesh axes {missing} not in mesh axes "
                     f"{self.mesh.axis_names}")
+        elif self.model_axes is not None:
+            raise ValueError("model_axes requires a mesh")
 
 
 @dataclasses.dataclass
@@ -243,6 +256,9 @@ class _Session:
     # per-shard layout cache for sharded pallas ticks; invalidated
     # together with `blocking` on edge mutations
     sharded_blocking: es_ops.ShardedNodeBlocking | None = None
+    # destination-aligned layout cache for PANEL-sharded ticks
+    # (ServiceConfig.model_axes); same invalidation discipline
+    model_blocking: es_ops.ModelShardedBlocking | None = None
     group_key: tuple | None = None  # last tick-group key (introspection)
     est: updates.EigenEstimate | None = None
     converged: bool = False
@@ -299,6 +315,15 @@ class StreamingService:
         self.cfg = cfg
         self._backend = backend_mod.resolve_backend(cfg.backend)
         self._mesh = cfg.mesh
+        # panel sharding is orthogonal to edge sharding: model serving
+        # re-buckets half-edges by destination shard itself, so the
+        # edge-balance contract (and _num_shards) stays on edge_axes
+        self._model_axes = (tuple(cfg.model_axes)
+                            if cfg.mesh is not None
+                            and cfg.model_axes is not None else None)
+        self._model_shards = (
+            program.num_model_shards(cfg.mesh, self._model_axes)
+            if self._model_axes is not None else 1)
         self._num_shards = (
             sharded_mod.num_edge_shards(cfg.mesh, cfg.edge_axes)
             if cfg.mesh is not None else 1)
@@ -362,7 +387,26 @@ class StreamingService:
             self._probes_run += 1
             probe_key = jax.random.fold_in(
                 jax.random.PRNGKey(cfg.seed + 7), self._probes_run)
-            if self._mesh is not None:
+            if self._model_axes is not None:
+                # Panel-sharded serving probes through the row-sharded
+                # matvec (owned rows per shard, one psum assembly) —
+                # the same decomposition the model tick runs.  The
+                # probe-time blocking is throwaway (the session builds
+                # its own on first tick); probes only run on admission
+                # and drift re-solves, so the host-side rebucket is off
+                # the tick path.
+                mb = gs.model_sharded_blocking(
+                    store, self._model_shards,
+                    block_n=cfg.tick_block_n)
+                probe = spectral_probes.probe_model_sharded(
+                    self._mesh, mb, probe_key,
+                    jnp.asarray(n, jnp.int32),
+                    model_axes=self._model_axes,
+                    num_probes=cfg.probe_vectors,
+                    num_steps=cfg.probe_steps,
+                    backend=self._backend,
+                )
+            elif self._mesh is not None:
                 # Sharded serving probes through the SAME psum-assembled
                 # matvec the tick programs run, so the rho anchoring the
                 # per-session dilation rescale is measured per shard and
@@ -537,13 +581,21 @@ class StreamingService:
     # ------------------------------------------------------------------
 
     def apply_updates(self, sid: str, edges, weights,
-                      mode: str = "set") -> gs.BatchStats:
+                      mode: str = "set",
+                      pad_to: int | None = None) -> gs.BatchStats:
         """Apply an edge batch; converged sessions take the first-order
-        eigen-update path, falling back to a warm re-solve on drift."""
+        eigen-update path, falling back to a warm re-solve on drift.
+
+        ``pad_to`` lets a caller draining many sessions at once (the
+        serve engine's per-capacity-class drain) pin one batch pad for
+        a whole class, so every session in the class hits the SAME
+        compiled apply instead of one compile per pow2 batch size."""
         cfg = self.cfg
         sess = self._get(sid)
         pad = max(_next_pow2(len(np.atleast_1d(weights))),
                   cfg.min_batch_pad)
+        if pad_to is not None:
+            pad = max(pad, _next_pow2(pad_to))
         batch = gs.coalesce_batch(edges, weights, mode=mode, pad_to=pad)
         store, dw, stats = gs.apply_edge_batch(sess.store, batch, mode=mode)
         base = sess.store
@@ -565,11 +617,13 @@ class StreamingService:
         store, rho_ub = gs.spectral_radius_upper_bound(store)
         rho_ub_new = float(rho_ub)
         sess.store = store
-        # edge mutation stales the pallas layouts (single and sharded),
-        # the measured residual-decay rate (operator changed), and —
-        # when the buffer grew a capacity class — the degree map
+        # edge mutation stales the blocked layouts (single, sharded,
+        # and model-sharded), the measured residual-decay rate
+        # (operator changed), and — when the buffer grew a capacity
+        # class — the degree map
         sess.blocking = None
         sess.sharded_blocking = None
+        sess.model_blocking = None
         sess.rate = None
         self._class_degree_cache = None
         if sess.rho_ub > 0.0:
@@ -690,10 +744,18 @@ class StreamingService:
         return degrees.get(self._class_key(sess), sess.plan_degree)
 
     def _ensure_blocking(self, sess: _Session) -> None:
-        """Build (or rebuild after updates) the session's node-blocked
-        layout for pallas ticks — host-side, cached on the session.
-        Sharded serving builds the per-shard variant instead."""
-        if self._mesh is not None:
+        """Build (or rebuild after updates) the session's blocked
+        layout for its tick path — host-side, cached on the session.
+        Edge-sharded serving builds the per-shard variant; panel
+        sharding builds the destination-aligned model layout (used by
+        BOTH backends — the model tick's segment path scatters over the
+        same per-shard arrays the kernel consumes)."""
+        if self._model_axes is not None:
+            if sess.model_blocking is None:
+                sess.model_blocking = gs.model_sharded_blocking(
+                    sess.store, self._model_shards,
+                    block_n=self.cfg.tick_block_n)
+        elif self._mesh is not None:
             if sess.sharded_blocking is None:
                 sess.sharded_blocking = gs.sharded_node_blocking(
                     sess.store, self._num_shards,
@@ -715,12 +777,19 @@ class StreamingService:
         blocking is never rebuilt just to anchor a bucket.
         """
         deg = self._session_degree(sess, degrees)
-        if self._backend == "pallas":
+        if self._model_axes is not None:
+            # panel sharding needs the layout statics on BOTH backends
+            # (the model tick's segment path runs over the same arrays)
+            self._ensure_blocking(sess)
+            b = sess.model_blocking
+            key = (self._class_key(sess), deg, b.block_n,
+                   b.num_chunks, b.block_e)
+        elif self._backend == "pallas":
             self._ensure_blocking(sess)
             b = (sess.sharded_blocking if self._mesh is not None
                  else sess.blocking)
             key = (self._class_key(sess), deg, b.block_n,
-                   b.chunks_per_block, b.block_e)
+                   b.num_chunks, b.block_e)
         else:
             key = (self._class_key(sess), deg)
         sess.group_key = key
@@ -735,10 +804,12 @@ class StreamingService:
             schedule = program.StepSchedule(
                 method=cfg.method, degree=key[1],
                 steps=cfg.steps_per_tick, backend=self._backend)
-            layout = key[2:] if self._backend == "pallas" else None
+            has_layout = (self._backend == "pallas"
+                          or self._model_axes is not None)
+            layout = key[2:] if has_layout else None
             fn = program.build_tick_program(
                 schedule, layout=layout, mesh=self._mesh,
-                edge_axes=cfg.edge_axes)
+                edge_axes=cfg.edge_axes, model_axes=self._model_axes)
             self._compiled[(key, occupancy)] = fn
         return fn
 
@@ -841,11 +912,20 @@ class StreamingService:
                 lrs = jnp.asarray([members[i].lr for i in idx], jnp.float32)
                 # traced per-session chunk budgets: no recompile for any mix
                 chunks = jnp.asarray(mults[np.asarray(idx)], jnp.int32)
-                if self._backend == "pallas" and self._mesh is not None:
+                if self._model_axes is not None:
+                    vs, res = step(
+                        stack(lambda s: s.model_blocking.u_local),
+                        stack(lambda s: s.model_blocking.other),
+                        stack(lambda s: s.model_blocking.weight),
+                        stack(lambda s: s.model_blocking.chunk_block),
+                        stack(lambda s: s.model_blocking.deg),
+                        stack(lambda s: s.v), cs, lrs, chunks)
+                elif self._backend == "pallas" and self._mesh is not None:
                     vs, res = step(
                         stack(lambda s: s.sharded_blocking.u_local),
                         stack(lambda s: s.sharded_blocking.other),
                         stack(lambda s: s.sharded_blocking.weight),
+                        stack(lambda s: s.sharded_blocking.chunk_block),
                         stack(lambda s: s.sharded_blocking.deg),
                         stack(lambda s: s.v), cs, lrs, chunks)
                 elif self._backend == "pallas":
@@ -853,6 +933,7 @@ class StreamingService:
                         stack(lambda s: s.blocking.u_local),
                         stack(lambda s: s.blocking.other),
                         stack(lambda s: s.blocking.weight),
+                        stack(lambda s: s.blocking.chunk_block),
                         stack(lambda s: s.blocking.deg),
                         stack(lambda s: s.v), cs, lrs, chunks)
                 else:
@@ -948,6 +1029,12 @@ class StreamingService:
             drop_trivial=cfg.drop_trivial, seed=cfg.seed,
             kmeans_restarts=cfg.kmeans_restarts)
         return np.asarray(sess.tracker.update(raw))
+
+    def capacity_class(self, sid: str) -> tuple[int, int]:
+        """(node capacity, edge capacity) of the session's class — the
+        serve layer's drain-batching group key (sessions in one class
+        share the compiled edge-batch apply at a common pad)."""
+        return self._class_key(self._get(sid))
 
     def session_info(self, sid: str) -> dict:
         return self._summary(self._get(sid))

@@ -19,16 +19,29 @@ and growth round edge capacities up to a multiple of the shard count
 (``balanced_capacity``), so every shard owns ``capacity / S`` slots.
 
 The kernel-epilogue AXPY fusion of the single-device pallas tick is a
-within-device luxury: sharded, the psum is the fusion barrier, so the
-dilation step ``u - c * L u`` applies post-psum (bitwise identical to
-the segment recurrence ordering).
+within-device luxury: edge-sharded, the psum is the fusion barrier, so
+the dilation step ``u - c * L u`` applies post-psum (bitwise identical
+to the segment recurrence ordering).
+
+PANEL sharding (``ServiceConfig(model_axes=...)``) is the second mesh
+policy: the (n, k) panel itself splits by row range — shard ``s`` owns
+rows ``[s * R, (s + 1) * R)`` and the destination-aligned half-edge
+layout landing there (``graph_store.model_sharded_blocking``) — so its
+local matvec rows are FINAL (the AXPY fuses back into the kernel
+epilogue), collectives merely assemble disjoint rows, and mu-EG steps
+ship their row assembly + 2k x 2k gram in ONE fused psum
+(``build_tick_model_sharded``).  There is no edge-balance contract to
+uphold: the layout re-buckets edges by destination itself, so any
+capacity works on any shard count.
 """
 from __future__ import annotations
 
 from repro.core.distributed import num_edge_shards
 from repro.core.program import (  # noqa: F401  (re-exported tick builders)
+    build_tick_model_sharded,
     build_tick_sharded_pallas,
     build_tick_sharded_segment,
+    num_model_shards,
 )
 
 
@@ -45,7 +58,9 @@ def balanced_capacity(capacity: int, num_shards: int) -> int:
 
 __all__ = [
     "balanced_capacity",
+    "build_tick_model_sharded",
     "build_tick_sharded_pallas",
     "build_tick_sharded_segment",
     "num_edge_shards",
+    "num_model_shards",
 ]

@@ -277,7 +277,7 @@ def test_blocking_determinism_and_padding():
         np.testing.assert_array_equal(a, b)
     for a, b in zip(b1[:4], bp[:4]):
         np.testing.assert_array_equal(a, b)  # padding slots invisible
-    assert b1.chunks_per_block == bp.chunks_per_block
+    assert b1.num_chunks == bp.num_chunks
 
 
 @pytest.mark.slow

@@ -22,7 +22,7 @@ from repro.core import (
     SolverConfig, backend, build_edge_incidence, laplacian_dense,
     limit_neg_exp, run_solver,
 )
-from repro.core import distributed, graphs, metrics, operators, solvers
+from repro.core import distributed, graphs, metrics, operators, program, solvers
 from repro.core import laplacian as lap
 from repro.kernels.edge_spmm import ops as es_ops
 
@@ -139,7 +139,7 @@ def test_sharded_blocking_shares_one_layout():
     gp = distributed.pad_edges_for_mesh(g, 8)
     sb = backend.sharded_blocking_for(gp, 8, block_n=64)
     assert sb.num_shards == 8
-    assert sb.chunks_per_block == es_ops.next_pow2(sb.chunks_per_block)
+    assert sb.num_chunks == es_ops.next_pow2(sb.num_chunks)
     assert sb.u_local.shape == sb.other.shape == sb.weight.shape
     assert sb.u_local.shape[0] == 8 and sb.deg.shape[0] == 8
 
@@ -201,7 +201,8 @@ def test_edgeless_store_sharded_blocking():
     g = lap.make_edge_list(np.zeros((0, 2), np.int64), 32)
     gp = distributed.pad_edges_for_mesh(lap.pad_edge_list(g, 64), 8)
     sb = backend.sharded_blocking_for(gp, 8, block_n=16)
-    assert sb.chunks_per_block == 1
+    # CSR chunk layout: every block owns >= 1 chunk even when edgeless
+    assert sb.num_chunks == es_ops.next_pow2(sb.num_blocks)
     v = _panel(5, 32, 2)
     for s in range(8):
         out = np.asarray(es_ops.edge_spmm_blocked(
@@ -407,3 +408,170 @@ def test_sharded_edgeless_admission_ticks(mesh):
         svc.tick()
         v = np.asarray(svc._sessions["empty"].v)
         assert np.isfinite(v).all(), b
+
+
+# ---------------------------------------------------------------------------
+# PANEL (model) sharded ticks — one fused rows+gram collective per step
+# ---------------------------------------------------------------------------
+
+def _model_mesh(num_shards: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < num_shards:
+        pytest.skip(f"needs {num_shards} devices")
+    return Mesh(np.array(devs[:num_shards]).reshape(1, num_shards),
+                ("data", "model"))
+
+
+def _model_tick_args(g, num_shards, *, block_n=32, k=4, seed=7,
+                     c=0.05, lr=0.2):
+    """One-session (G=1) argument pack for build_tick_model_sharded."""
+    mb = backend.build_model_sharded_blocking(
+        np.asarray(g.src), np.asarray(g.dst), np.asarray(g.weight),
+        g.num_nodes, num_shards, block_n=block_n)
+    v = _panel(seed, g.num_nodes, k)
+    args = (mb.u_local[None], mb.other[None], mb.weight[None],
+            mb.chunk_block[None], mb.deg[None], v[None],
+            jnp.asarray([c], jnp.float32), jnp.asarray([lr], jnp.float32),
+            jnp.asarray(1, jnp.int32))
+    return mb, args
+
+
+@pytest.mark.distributed
+def test_model_tick_sharding_invariance():
+    """The panel-sharded tick is shard-count invariant: S in {2, 4, 8}
+    matches S=1 to <= 1e-5 for BOTH solver methods (short horizon — the
+    per-shard gram partial sums reorder float adds, ~1e-7/step)."""
+    g = CASES["weighted"]()
+    for method in ("mu_eg", "oja"):
+        sched = program.StepSchedule(method=method, degree=3, steps=4,
+                                     backend="segment")
+        by_s = {}
+        for s in (1, 2, 4, 8):
+            if s > len(jax.devices()):
+                continue
+            mesh = _model_mesh(s)
+            mb, args = _model_tick_args(g, s)
+            tick = program.build_tick_model_sharded(
+                sched, mesh, ("model",), mb.block_n, mb.num_chunks,
+                mb.block_e)
+            out, res = tick(*args)
+            by_s[s] = (np.asarray(out), np.asarray(res))
+        base_v, base_r = by_s[1]
+        assert np.isfinite(base_v).all()
+        for s, (v, r) in by_s.items():
+            assert np.max(np.abs(v - base_v)) <= TOL, (method, s)
+            np.testing.assert_allclose(r, base_r, atol=TOL)
+
+
+@pytest.mark.distributed
+def test_model_tick_one_fused_collective_per_step():
+    """Trace-time psum accounting: the mu-EG model tick ships its row
+    assembly and 2k x 2k gram in EXACTLY ONE fused (tuple) collective
+    per solver step; oja has no gram form and fuses nothing.  Plain
+    counts pin the rest of the budget — loop bodies trace ONCE, so the
+    traced program holds: one assembly inside the dilation body, the
+    final residual apply's dilation body + its own assembly, and (oja
+    only) the step's plain row assembly."""
+    g = CASES["weighted"]()
+    mesh = _model_mesh(2)
+    degree = 3
+    for method, fused_want, plain_want in (
+            ("mu_eg", 1, 3),
+            ("oja", 0, 4)):
+        sched = program.StepSchedule(method=method, degree=degree,
+                                     steps=4, backend="segment")
+        mb, args = _model_tick_args(g, 2)
+        tick = program.build_tick_model_sharded(
+            sched, mesh, ("model",), mb.block_n, mb.num_chunks,
+            mb.block_e)
+        with program.count_psums() as stats:
+            jax.eval_shape(tick, *args)
+        assert stats.fused == fused_want, method
+        assert stats.plain == plain_want, method
+
+
+@pytest.mark.distributed
+def test_service_model_sharded_tick_equivalence():
+    """model_axes serving == single-device segment serving to <= 1e-5
+    on weighted / capacity-padded / non-aligned graphs, S in {2, 4, 8},
+    including the admission probe routed through the row-sharded matvec
+    and update-triggered layout invalidation + rebuild."""
+    from repro.stream.service import ServiceConfig, StreamingService
+
+    common = dict(k=4, num_clusters=3, degree=5, steps_per_tick=5,
+                  lr=0.3, seed=0, backend="segment")
+    single = StreamingService(ServiceConfig(**common))
+    sharded = []
+    for s in (2, 4, 8):
+        if s > len(jax.devices()):
+            continue
+        sharded.append(StreamingService(ServiceConfig(
+            mesh=_model_mesh(s), model_axes=("model",), **common)))
+    assert sharded, "distributed marker guarantees >= 2 devices"
+    svcs = [single] + sharded
+    for sid, g in _service_graphs().items():
+        for svc in svcs:
+            svc.add_graph(sid, g)
+    res = [svc.tick() for svc in svcs]
+    for sid in _service_graphs():
+        for svc, r in zip(svcs[1:], res[1:]):
+            assert abs(r[sid] - res[0][sid]) <= TOL, sid
+            err = float(np.max(np.abs(
+                np.asarray(svc._sessions[sid].v)
+                - np.asarray(single._sessions[sid].v))))
+            assert err <= TOL, (sid, err)
+    # updates stale the destination-aligned layouts; ticks re-glue
+    for svc in svcs:
+        svc.apply_updates("weighted", [[0, 5], [1, 7]], [1.0, 1.0])
+    assert sharded[0]._sessions["weighted"].model_blocking is None
+    for svc in svcs:
+        svc.tick()
+    assert sharded[0]._sessions["weighted"].model_blocking is not None
+    for svc in svcs[1:]:
+        err = float(np.max(np.abs(
+            np.asarray(svc._sessions["weighted"].v)
+            - np.asarray(single._sessions["weighted"].v))))
+        assert err <= TOL, err
+    # one compiled program per (class, degree, layout, occupancy bucket)
+    assert sharded[0].compile_count == len(
+        {s.group_key for s in sharded[0]._sessions.values()})
+
+
+@pytest.mark.distributed
+def test_million_node_model_sharded_tick():
+    """Million-node acceptance row: n = 1e6, E ~ 5e7 power-law edges
+    (alpha = 2.5 — the hub-skewed regime the CSR chunk layout exists
+    for) admitted, planned, and ticked end-to-end through the
+    panel-sharded service on the 8-virtual-device lane.  Lean knobs
+    (degree budget 1, k = 3, 2 steps, probe off) keep this a wall-time
+    test of the SCALE path, not of convergence."""
+    from repro.stream import service as service_mod
+    from repro.stream.service import ServiceConfig, StreamingService
+
+    n = 1_000_000
+    g = graphs.power_law_graph(n, avg_degree=100.0, alpha=2.5, seed=0,
+                               dedup=False)
+    assert g.num_edges >= 45_000_000
+    num_shards = min(8, len(jax.devices()))
+    svc = StreamingService(ServiceConfig(
+        backend="segment", mesh=_model_mesh(num_shards),
+        model_axes=("model",), probe_spectrum=False,
+        k=3, num_clusters=2, degree=1, steps_per_tick=2, seed=0))
+    # pin the ladder's top class outright: the default 1.5x admission
+    # headroom would walk past it at 5e7 live edges
+    from repro.stream import graph_store as gs
+    svc.add_graph("web", g, edge_capacity=gs.CAPACITY_CLASSES[-1])
+    res = svc.tick()["web"]
+    assert np.isfinite(res)
+    sess = svc._sessions["web"]
+    # the panel lives at the node-capacity class (pow2 >= n); the real
+    # graph occupies the first n rows
+    v = np.asarray(sess.v)
+    assert v.shape == (service_mod.node_capacity_class(n), 3)
+    assert np.isfinite(v[:n]).all()
+    # the layout really shards: every shard owns rows, and the skewed
+    # half-edge mass spreads without any per-shard edge-balance contract
+    mb = sess.model_blocking
+    assert mb.num_shards == num_shards
+    assert mb.rows_per_shard * num_shards >= n
+    assert mb.padded_half_edges >= 2 * g.num_edges

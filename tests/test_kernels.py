@@ -178,16 +178,20 @@ def _half_edge_multiset(src, dst, w):
 
 
 def _blocking_half_edges(nb: es_ops.NodeBlocking):
-    """Live half-edges a blocking actually materialized, globalized."""
-    per_block = nb.chunks_per_block * nb.block_e
-    ul = np.asarray(nb.u_local).reshape(-1, per_block)
-    ot = np.asarray(nb.other).reshape(-1, per_block)
-    wt = np.asarray(nb.weight).reshape(-1, per_block)
+    """Live half-edges a blocking actually materialized, globalized.
+
+    Walks the CSR chunk layout: chunk c belongs to block
+    ``chunk_block[c]``, so a destination's global row id is
+    ``chunk_block[c] * block_n + u_local``."""
+    cb = np.asarray(nb.chunk_block)[: nb.num_chunks]
+    ul = np.asarray(nb.u_local).reshape(nb.num_chunks, nb.block_e)
+    ot = np.asarray(nb.other).reshape(nb.num_chunks, nb.block_e)
+    wt = np.asarray(nb.weight).reshape(nb.num_chunks, nb.block_e)
     out = []
-    for b in range(ul.shape[0]):
-        live = wt[b] != 0.0
-        out.extend(zip((ul[b, live] + b * nb.block_n).tolist(),
-                       ot[b, live].tolist(), wt[b, live].tolist()))
+    for c in range(nb.num_chunks):
+        live = wt[c] != 0.0
+        out.extend(zip((ul[c, live] + int(cb[c]) * nb.block_n).tolist(),
+                       ot[c, live].tolist(), wt[c, live].tolist()))
     return sorted(out)
 
 
@@ -215,7 +219,7 @@ def _check_sharded_blocking_covers_each_half_edge_once(seed: int):
     sb = es_ops.build_sharded_node_blocking(src, dst, w, n, num_shards,
                                             block_n=block_n)
     per = len(src) // num_shards
-    assert sb.chunks_per_block == es_ops.next_pow2(sb.chunks_per_block)
+    assert sb.num_chunks == es_ops.next_pow2(sb.num_chunks)
     for s in range(num_shards):
         sl = slice(s * per, (s + 1) * per)
         assert (_blocking_half_edges(sb.shard(s))
@@ -251,9 +255,8 @@ def _check_blocking_chunks_pow2_snapped(seed: int):
     nb = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n)
     raw = es_ops.build_node_blocking(src, dst, w, n, block_n=block_n,
                                      snap_chunks=False)
-    assert nb.chunks_per_block == es_ops.next_pow2(raw.chunks_per_block)
-    assert raw.chunks_per_block <= nb.chunks_per_block \
-        < 2 * max(raw.chunks_per_block, 1)
+    assert nb.num_chunks == es_ops.next_pow2(raw.num_chunks)
+    assert raw.num_chunks <= nb.num_chunks < 2 * max(raw.num_chunks, 1)
 
 
 def _check_blocking_padding_inert(seed: int):
@@ -272,7 +275,7 @@ def _check_blocking_padding_inert(seed: int):
     nb_p = es_ops.build_node_blocking(src_p, dst_p, w_p, n, block_n=block_n)
     for a, b in zip(nb[:4], nb_p[:4]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert nb.chunks_per_block == nb_p.chunks_per_block
+    assert nb.num_chunks == nb_p.num_chunks
     # an all-padding shard is a zero operator (exact zeros, no NaN)
     sb = es_ops.build_sharded_node_blocking(
         np.zeros(16, np.int64), np.zeros(16, np.int64),

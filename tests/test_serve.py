@@ -189,6 +189,45 @@ def test_server_serialized_pipeline_applies_inline():
         ServerConfig(pipeline="bogus")
 
 
+def test_server_drains_capacity_classes_through_one_pad():
+    """The drain groups staged sessions by capacity class and pins ONE
+    pow2 batch pad per class, so every member's apply hits the same
+    compiled edge-batch program (keyed on capacity, pad, mode) — one
+    compile per class, not one per pow2 batch size per session.  A
+    different-capacity session forms its own class, and the padded
+    applies land identically to the serialized pipeline's unpadded
+    inline applies."""
+    srv = Server(ServerConfig(service=SERVE_SVC))
+    base = Server(ServerConfig(service=SERVE_SVC, pipeline="serialized"))
+    edges, w, n, _ = _sbm_edges(21)
+    for s in (srv, base):
+        s.admit("a", edges, n, weights=w, edge_capacity=1024)
+        s.admit("b", edges, n, weights=w, edge_capacity=1024)
+        s.admit("c", edges, n, weights=w, edge_capacity=2048)
+    assert (srv.service.capacity_class("a")
+            == srv.service.capacity_class("b")
+            != srv.service.capacity_class("c"))
+    # different batch sizes inside the shared class: the class pad is
+    # the pow2 of the largest, so both applies share one batch shape
+    pushes = [("a", [[0, 5], [1, 6], [2, 7]]), ("b", [[3, 8]]),
+              ("c", [[4, 9]])]
+    for s in (srv, base):
+        for sid, es in pushes:
+            s.push(sid, es, [0.5] * len(es), mode="add")
+    srv.step()
+    assert srv.metrics.counter("drain_classes") == 2  # {a, b} and {c}
+    assert srv.metrics.counter("applied_batches") == 3
+    assert srv.metrics.counter("dropped_batches") == 0
+    # padding is a no-op on the stores: padded slots carry zero weight
+    for sid in ("a", "b", "c"):
+        np.testing.assert_array_equal(
+            np.asarray(srv.service._sessions[sid].store.weight),
+            np.asarray(base.service._sessions[sid].store.weight))
+        np.testing.assert_array_equal(
+            np.asarray(srv.service._sessions[sid].store.src),
+            np.asarray(base.service._sessions[sid].store.src))
+
+
 # ---------------------------------------------------------------------------
 # concurrency: threaded ingest + queries against a live engine thread
 # ---------------------------------------------------------------------------
