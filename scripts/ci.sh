@@ -30,9 +30,12 @@ python -m benchmarks.bench_serve --http-smoke
 # streaming + serving benches and diff their freshly written
 # BENCH_*.json key metrics against the committed files.  These two
 # lanes have been regression-quiet across PRs 6-9, so a >25% drop (or
-# a crashed bench module) now fails CI — interpret-mode pallas rows
-# report us_per_call=0 and are exempt, which keeps the gate on real
-# segment-path numbers, not CPU kernel emulation.
+# a crashed bench module) now fails CI.  Rows with committed
+# us_per_call=0 are exempt by design: interpret-mode pallas rows
+# (CPU kernel emulation, not real timings) and the serve ingest walls
+# (thread-interleaving makes even best-of-3 walls bimodal; bench_serve
+# gates via its internal correctness asserts instead) — which keeps
+# the blocking gate on the stable jit-compute-bound stream numbers.
 python -m benchmarks.run --check --only stream,serve
 # Skew + weak-scaling rows (NON-BLOCKING): the kernels/distributed
 # benches carry the CSR-vs-uniform padded-work rows and the
